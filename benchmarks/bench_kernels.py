@@ -1,0 +1,62 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness +
+relative wall time vs the jnp oracle; on TPU the same harness times the real
+kernels).
+
+CSV: name, us_per_call = kernel wall time (us), derived =
+"ref_us=<oracle>/max_err=<abs err>".
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.gemm import gemm
+from repro.kernels.gru import gru_cell
+from repro.kernels.ops import plan_gemm
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    for m, n, k in [(256, 256, 256), (128, 512, 256)]:
+        a = jnp.asarray(rng.uniform(-1, 1, (m, k)), jnp.float32)
+        b = jnp.asarray(rng.uniform(-1, 1, (k, n)), jnp.float32)
+        tile, _ = plan_gemm(m, n, k)
+        out, us = _time(lambda x, y: gemm(x, y, block=tile, interpret=True),
+                        a, b)
+        want, ref_us = _time(ref.gemm_ref, a, b)
+        err = float(jnp.max(jnp.abs(out - want)))
+        rows.append((f"pallas_gemm_{m}x{n}x{k}_tile{tile[0]}", us,
+                     f"ref_us={ref_us:.1f}/max_err={err:.2e}"))
+
+    B, E, H = 8, 64, 128
+    params = {}
+    for name in ("Wr", "Wz", "Wn"):
+        params[name] = jnp.asarray(rng.uniform(-0.3, 0.3, (E, H)), jnp.float32)
+    for name in ("Ur", "Uz", "Un"):
+        params[name] = jnp.asarray(rng.uniform(-0.3, 0.3, (H, H)), jnp.float32)
+    for name in ("br", "bz", "bnx", "bnh"):
+        params[name] = jnp.zeros((H,), jnp.float32)
+    x = jnp.asarray(rng.uniform(-1, 1, (B, E)), jnp.float32)
+    h = jnp.asarray(rng.uniform(-1, 1, (B, H)), jnp.float32)
+    out, us = _time(lambda xx, hh: gru_cell(xx, hh, params, block=(8, 128),
+                                            interpret=True), x, h)
+    want, ref_us = _time(lambda xx, hh: ref.gru_cell_ref(xx, hh, params),
+                         x, h)
+    err = float(jnp.max(jnp.abs(out - want)))
+    rows.append((f"pallas_gru_{B}x{H}", us, f"ref_us={ref_us:.1f}"
+                                            f"/max_err={err:.2e}"))
+    return rows

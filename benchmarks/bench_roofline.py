@@ -1,0 +1,45 @@
+"""Roofline summary over the multi-pod dry-run artifacts (deliverable g).
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun) and prints one
+row per (arch x shape x mesh): the three roofline terms, the dominant
+bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+
+CSV: name, us_per_call = roofline-bound step time (us), derived =
+"dom=<term>/comp=<s>/mem=<s>/coll=<s>/useful=<model/hlo ratio>".
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(art_dir: str = ART_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for rec in load_records():
+        name = f"roofline_{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        if rec.get("status") == "skipped":
+            rows.append((name, 0.0, "skipped=long_500k_full_attention"))
+            continue
+        if rec.get("status") != "ok":
+            rows.append((name, 0.0, f"error={rec.get('error', '?')[:60]}"))
+            continue
+        r = rec["roofline"]
+        ratio = rec.get("model_flops_ratio")
+        derived = (f"dom={r['dominant'].replace('_s', '')}"
+                   f"/comp={r['compute_s']:.3e}"
+                   f"/mem={r['memory_s']:.3e}"
+                   f"/coll={r['collective_s']:.3e}"
+                   f"/useful={ratio:.3f}" if ratio is not None else "")
+        rows.append((name, r["roofline_s"] * 1e6, derived))
+    return rows

@@ -1,0 +1,54 @@
+"""Benchmark harness — one suite per paper table/figure (+ the roofline).
+
+    PYTHONPATH=src python -m benchmarks.run [--only <suite>]
+
+Prints ``name,us_per_call,derived`` CSV.
+Suites:
+    mapper    — paper Section 6.1 (mapping coverage)
+    gemm      — paper Figure 3 (DeepBench GEMM, ISAM vs kernel library)
+    gru       — paper Figure 4 (128-step GRU, fusion + persistent weights)
+    resnet    — paper Figure 5 (ResNet-50 layers via conv->matmul mapping)
+    kernels   — Pallas kernel microbenchmarks vs jnp oracles
+    roofline  — dry-run roofline terms per (arch x shape x mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (bench_gemm, bench_gru, bench_kernels, bench_mapper,
+                   bench_resnet, bench_roofline)
+    suites = {
+        "mapper": bench_mapper.run,
+        "gemm": bench_gemm.run,
+        "gru": bench_gru.run,
+        "resnet": bench_resnet.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites.items():
+        try:
+            for row_name, us, derived in fn():
+                print(f"{row_name},{us:.2f},{derived}", flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

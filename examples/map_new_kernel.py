@@ -1,0 +1,64 @@
+"""Bring-your-own-kernel: write a NEW operation in ISAMIR and let the
+compiler map + schedule it with zero per-kernel engineering — the paper's
+core pitch ("novel kernels without kernel-library additions").
+
+    PYTHONPATH=src python examples/map_new_kernel.py
+
+The kernel here is a *gated cross-channel mixer* (invented for this demo):
+
+    Y[b, t, o] = sigmoid(sum_c X[b, t, c] * G[c, o]) * (sum_c X[b, t, c] * U[c, o])
+
+ISAM factors it into two matmuls + fused elementwise automatically.
+"""
+import numpy as np
+
+from repro.core import instructions as I
+from repro.core.executor import execute
+from repro.core.ir import ProgramBuilder, interpret, random_inputs
+from repro.core.isel import select_instructions
+from repro.core.scheduler import schedule
+from repro.core.sysgraph import tpu_v5e
+
+B, T, C, O = 4, 32, 96, 64
+
+pb = ProgramBuilder("gated_mixer")
+b, t, o, c = pb.axes(b=B, t=T, o=O, c=C)
+X = pb.buffer("X", (B, T, C))
+G = pb.buffer("G", (C, O))
+U = pb.buffer("U", (C, O))
+Gate = pb.buffer("Gate", (B, T, O), temp=True)
+Up = pb.buffer("Up", (B, T, O), temp=True)
+Y = pb.buffer("Y", (B, T, O))
+t1 = pb.temp("t1", (B, T, O, C))
+t2 = pb.temp("t2", (B, T, O, C))
+pb.stmt(t1[b, t, o, c], ":=", X[b, t, c])
+pb.stmt(t1[b, t, o, c], "*=", G[c, o])
+pb.stmt(Gate[b, t, o], "+=", t1[b, t, o, c])
+pb.apply(Gate[b, t, o], "sigmoid", Gate[b, t, o])
+pb.stmt(t2[b, t, o, c], ":=", X[b, t, c])
+pb.stmt(t2[b, t, o, c], "*=", U[c, o])
+pb.stmt(Up[b, t, o], "+=", t2[b, t, o, c])
+pb.stmt(Y[b, t, o], ":=", Gate[b, t, o])
+pb.stmt(Y[b, t, o], "*=", Up[b, t, o])
+pb.output("Y")
+prog = pb.build()
+print(prog.pretty())
+
+sel = select_instructions(prog, I.tpu_isa())
+assert sel.complete
+print("\nmapped to:", [si.needle.name for si in sel.instrs])
+
+sched = schedule(sel, tpu_v5e(1))
+print(f"schedule: {sched.counts()}, modeled {sched.makespan*1e6:.1f} us")
+
+rng = np.random.default_rng(3)
+ins = random_inputs(prog, rng)
+got = execute(sched, sel, ins)["Y"]
+want = interpret(prog, ins)["Y"]
+np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+sig = 1 / (1 + np.exp(-(ins["X"] @ ins["G"])))
+ref = sig * (ins["X"] @ ins["U"])
+np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-4)
+print("new kernel mapped, scheduled and executed correctly — no "
+      "hand-written lowering rule involved")

@@ -1,0 +1,62 @@
+"""Quickstart: the ISA Mapper pipeline end to end on one kernel.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Express a 1-D convolution in ISAMIR (the paper's Listing 5).
+2. Deterministically map it onto the MXU matmul instruction (Listing 6).
+3. Statically schedule it on a TPU v5e system graph (tiles, copies,
+   cache-tracked memory movement).
+4. Execute the recorded instruction stream and check it against the oracle.
+5. Run the same GEMM through the ISAM-planned Pallas kernel.
+"""
+import numpy as np
+
+from repro.core import instructions as I
+from repro.core import kernels_ir as K
+from repro.core.executor import execute
+from repro.core.ir import interpret, random_inputs
+from repro.core.isel import select_instructions
+from repro.core.mapper import map_program
+from repro.core.scheduler import schedule
+from repro.core.sysgraph import tpu_v5e
+
+# 1. the haystack program ----------------------------------------------------
+conv = K.conv1d(batch=4, width=32, kw=3, cin=64, cout=64)
+print("== ISAMIR (paper Listing 5) ==")
+print(conv.pretty())
+
+# 2. deterministic mapping ----------------------------------------------------
+result = map_program(conv, I.mxu_matmul())
+print(f"\n== {len(result.mappings)} mappings found ==")
+best = result.best(conv)
+print(f"best: axis_map={dict(best.axis_map)} outer={best.outer_axes} "
+      f"calls={best.calls(conv)}")
+
+# 3. instruction selection + static schedule ----------------------------------
+sel = select_instructions(conv, I.tpu_isa())
+graph = tpu_v5e(n_cores=1)
+sched = schedule(sel, graph)
+print(f"\n== schedule: {sched.counts()} ops, modeled "
+      f"{sched.makespan * 1e6:.1f} us, {sched.bytes_moved()} bytes moved ==")
+
+# 4. replay execution vs the oracle --------------------------------------------
+rng = np.random.default_rng(0)
+ins = random_inputs(conv, rng)
+got = execute(sched, sel, ins)["C"]
+want = interpret(conv, ins)["C"]
+np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+print("replayed instruction stream matches the ISAMIR oracle")
+
+# 5. ISAM-planned Pallas GEMM ---------------------------------------------------
+import jax.numpy as jnp
+from repro.kernels.ops import plan_gemm, scheduled_gemm
+from repro.kernels.ref import gemm_ref
+
+tile, modeled = plan_gemm(512, 256, 1024)
+a = jnp.asarray(rng.uniform(-1, 1, (512, 1024)), jnp.float32)
+b = jnp.asarray(rng.uniform(-1, 1, (1024, 256)), jnp.float32)
+out = scheduled_gemm(a, b, interpret=True)
+np.testing.assert_allclose(np.asarray(out), np.asarray(gemm_ref(a, b)),
+                           rtol=1e-5, atol=1e-5)
+print(f"Pallas GEMM with ISAM-chosen BlockSpec tile {tile}: OK "
+      f"(modeled {modeled * 1e6:.1f} us on v5e)")

@@ -1,0 +1,71 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the full production stack — config, sharded train step, deterministic
+data pipeline, AdamW, checkpoint/restart runtime — on a ~100M-param dense
+model (a scaled olmo family member).  On CPU this takes a few minutes; on a
+pod the same driver takes the full config and production mesh.
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_source
+from repro.launch.mesh import make_host_mesh
+from repro.launch.train import build_trainer
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.fault_tolerance import TrainingRuntime
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--width", type=int, default=768,
+                    help="d_model (default 768 -> ~100M params; use 256 "
+                         "for a fast single-CPU-core run)")
+    ap.add_argument("--layers", type=int, default=12)
+    args = ap.parse_args()
+
+    # default: ~100M params (olmo family at width 768 / depth 12).
+    # On one CPU core the full size takes ~1 h for 300 steps; pass
+    # --width 256 --layers 6 for a minutes-scale demo of the same stack.
+    cfg = get_config("olmo-1b").scaled(
+        n_layers=args.layers, d_model=args.width,
+        n_heads=args.width // 64, n_kv_heads=args.width // 64,
+        d_ff=4 * args.width, vocab_size=32000, remat=False)
+    n_params = cfg.param_count()
+    print(f"model: {n_params/1e6:.1f}M params ({cfg.n_layers}L x "
+          f"{cfg.d_model}d)")
+
+    mesh = make_host_mesh()
+    opt_cfg = AdamWConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps)
+    model, init_state, step, _ = build_trainer(cfg, opt_cfg, mesh)
+
+    dcfg = DataConfig(seed=11, global_batch=args.batch, seq_len=args.seq)
+    source = make_source(dcfg, cfg)
+
+    ckpt = Checkpointer("artifacts/ckpt_train_lm")
+    rt = TrainingRuntime(ckpt, save_every=100)
+    carry = init_state(jax.random.PRNGKey(7))
+
+    losses = []
+
+    def on_metrics(s, m, dt, slow):
+        losses.append(float(m["loss"]))
+        if s % 25 == 0:
+            print(f"step {s:4d} loss {losses[-1]:.4f} "
+                  f"({dt*1e3:.0f} ms/step)", flush=True)
+
+    rt.run(carry, step, lambda s: source.batch(s), args.steps, on_metrics)
+    print(f"loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps")
+    assert losses[-1] < losses[0], "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

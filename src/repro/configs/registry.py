@@ -1,0 +1,69 @@
+"""Architecture registry: ``get_config(arch)`` + ``input_specs(cfg, shape)``.
+
+Each assigned architecture lives in its own module defining ``CONFIG`` (the
+exact published configuration) and ``smoke_config()`` (a reduced same-family
+variant for CPU smoke tests)."""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+
+ARCHS = [
+    "xlstm-1.3b",
+    "olmo-1b",
+    "qwen2-7b",
+    "qwen1.5-32b",
+    "qwen2.5-32b",
+    "phi3.5-moe-42b-a6.6b",
+    "mixtral-8x7b",
+    "llava-next-34b",
+    "jamba-1.5-large-398b",
+    "whisper-medium",
+]
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        f"repro.configs.{arch.replace('-', '_').replace('.', '_')}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                for_train: bool | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B,), i32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+    if cfg.family == "vlm":
+        n_patches = cfg.frontend_tokens or 576
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_patches, cfg.d_model), f)
+    if cfg.family == "audio":
+        n_frames = cfg.frontend_tokens or 1500
+        specs["audio_embeds"] = jax.ShapeDtypeStruct(
+            (B, n_frames, cfg.d_model), f)
+    return specs
+
+
+def cell_applicable(arch: str, shape_name: str) -> bool:
+    return shape_applicable(arch, shape_name)
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCHS for s in SHAPES]

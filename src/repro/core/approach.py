@@ -1,0 +1,156 @@
+"""The Approach class — unified interface to all compiler choices (Section 4).
+
+Every combinatorial decision the compiler makes is routed through one of the
+methods below: instruction ranking, tiling factors, unroll order, device
+allocation, copy-source selection, memory paths, and buffer homes.  The
+default ``GreedyApproach`` implements the paper's heuristics; CostModel- and
+random-sampling Approaches plug in without touching compiler internals.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .isel import SelectedInstr
+    from .scheduler import ComputeTile, SchedulerState
+    from .sysgraph import ComputeNode, MoveEdge, SystemGraph
+
+
+class Approach:
+    """Base class: every method has the paper's default heuristic."""
+
+    # ---- instruction selection (Section 2.4) ------------------------------
+    def rank_instruction(self, si: "SelectedInstr", prog):
+        """Sort key: minimum final instruction count — widest window first,
+        then fewest invocations."""
+        return (-len(si.mapping.stmt_map), si.mapping.calls(prog))
+
+    # ---- tiling (Section 3.3) ---------------------------------------------
+    #: VMEM budget the tile working set may claim (bytes)
+    tile_vmem_budget: int = 96 << 20
+
+    def choose_tile_shape(self, needle_name: str, extents: dict[str, int],
+                          hw_tile: tuple[int, int, int],
+                          vmem_budget: int | None = None) -> dict[str, int]:
+        """Tile sizes for the mapped (i, j, k) axes of a matmul-like needle.
+
+        Output dims (i, j) tile at the hardware shape; the reduction axis
+        streams as deep as the VMEM budget allows (copy coalescing: one big
+        panel DMA replaces ceil(K/tk) small ones, and the MXU pipelines the
+        k-passes within the tile)."""
+        ti, tj, tk = hw_tile
+        out = {}
+        for axis, ext in extents.items():
+            cap = {"i": ti, "j": tj}.get(axis)
+            if cap is not None:
+                out[axis] = min(ext, cap)
+        budget = self.tile_vmem_budget
+        if vmem_budget is not None:
+            budget = min(budget, vmem_budget)
+        if "k" in extents:
+            bm = out.get("i", ti)
+            bn = out.get("j", tj)
+            # A panel (bm, k) + B panel (k, bn) + C tile, 4B each
+            k_max = max(tk, (budget // 4 - bm * bn) // max(bm + bn, 1))
+            out["k"] = min(extents["k"], k_max)
+            # grow the j tile into leftover budget (fewer output routings),
+            # MXU-aligned
+            bk = out["k"]
+            j_max = (budget // 4 - bm * bk) // max(bk + bm, 1)
+            j_max = max(tj, (j_max // tj) * tj)
+            if "j" in extents:
+                out["j"] = min(extents["j"], max(out.get("j", tj), j_max))
+        for axis, ext in extents.items():
+            out.setdefault(axis, min(ext, max(ti, tj, tk)))
+        return out
+
+    # ---- unrolling (Section 3.3) ------------------------------------------
+    def unroll_order(self, tiles: list["ComputeTile"]) -> list["ComputeTile"]:
+        """Dependency/issue order.  Default heuristic (paper 3.3): place
+        computations which use the same memory close together — sort by
+        output region so accumulation chains are adjacent, keeping the
+        reduction (k) innermost."""
+        return sorted(tiles, key=lambda t: (t.instr_idx, t.out_key(), t.red_key()))
+
+    # ---- device allocation (Section 3.4) ------------------------------------
+    def choose_device(self, tile: "ComputeTile",
+                      candidates: Sequence["ComputeNode"],
+                      state: "SchedulerState") -> "ComputeNode":
+        """Balance memory locality against parallelism (paper 3.4): prefer
+        the device whose memory already holds the most operand bytes (so
+        persistent weights pin work to their core), then least-loaded."""
+        best, best_key = None, None
+        for c in candidates:
+            missing = 0
+            for _, region, r, w in tile.operands:
+                resident = state.holds_region(c.memory, region)
+                if (r or w) and not resident:
+                    missing += region.nbytes()
+            load = state.device_load.get(c.name, 0.0)
+            key = (missing, load)
+            if best_key is None or key < best_key:
+                best, best_key = c, key
+        return best
+
+    # ---- memory movement (Section 3.5) ---------------------------------------
+    def choose_source(self, options: list[tuple[str, float]]) -> str:
+        """Pick which existing copy to read from: (memory node, est. cost)."""
+        return min(options, key=lambda o: o[1])[0]
+
+    def choose_path(self, graph: "SystemGraph", src: str, dst: str,
+                    nbytes: int) -> list["MoveEdge"]:
+        return graph.shortest_path(src, dst, nbytes)
+
+    def choose_home(self, buffer_name: str, nbytes: int,
+                    graph: "SystemGraph") -> str:
+        """Initial residence of a buffer: round-robin across the level-1
+        (HBM) modules, falling back to host for oversized buffers."""
+        hbms = sorted(m.name for m in graph.memories.values() if m.level == 1)
+        if not hbms:
+            return "host"
+        pick = hbms[hash(buffer_name) % len(hbms)]
+        if nbytes > graph.memories[pick].capacity // 2:
+            return "host"
+        return pick
+
+
+class GreedyApproach(Approach):
+    """The paper's reported configuration: pure heuristics."""
+
+
+@dataclass
+class RandomApproach(Approach):
+    """Random choices — the sampling primitive for search-based approaches."""
+
+    seed: int = 0
+    rng: random.Random = field(init=False)
+
+    def __post_init__(self):
+        self.rng = random.Random(self.seed)
+
+    def choose_device(self, tile, candidates, state):
+        return self.rng.choice(list(candidates))
+
+    def unroll_order(self, tiles):
+        tiles = list(tiles)
+        self.rng.shuffle(tiles)
+        # keep accumulation chains valid: stable-sort back by output region
+        tiles.sort(key=lambda t: (t.instr_idx, t.out_key()))
+        return tiles
+
+
+class CostModelApproach(Approach):
+    """Samples N candidate Approaches, schedules with each, and keeps the one
+    whose *modeled makespan* (scheduler cost model) is lowest.  This is the
+    'cost models and potentially machine learning' extension point of
+    Section 4 — implemented as schedule-level search."""
+
+    def __init__(self, samples: int = 8, seed: int = 0):
+        self.samples = samples
+        self.seed = seed
+
+    def candidates(self) -> list[Approach]:
+        return [GreedyApproach()] + [RandomApproach(self.seed + s)
+                                     for s in range(self.samples - 1)]

@@ -1,0 +1,183 @@
+"""System description graph (paper Section 3.2).
+
+The machine is described as a graph of *compute nodes* (which instructions
+they execute, out of which memory), *memory nodes* (capacity, level), and
+*data-movement edges* (bandwidth/latency, which device issues the copy).
+Nodes are stateful during scheduling: memory nodes track resident buffer
+copies, compute nodes accumulate their instruction streams — the graph is the
+hardware abstraction layer the static scheduler dry-runs against.
+
+Two factories are provided:
+
+  * ``tpu_v5e(n_cores)`` — the TPU target: HBM (819 GB/s, 16 GiB) feeding
+    per-core VMEM (128 MiB) feeding an MXU (matmul) + VPU (elementwise).
+  * ``paper_accelerator(n_clusters)`` — the paper's case-study device
+    (Section 5): clusters of paired processing units sharing register files,
+    several HBM modules, everything explicitly managed.  Used by the GEMM and
+    GRU benchmarks so results are comparable with the paper's Figures 3-4.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MemoryNode:
+    name: str
+    capacity: int                  # bytes
+    level: int                     # 0 = host/system memory, larger = closer
+
+
+@dataclass(frozen=True)
+class ComputeNode:
+    name: str
+    memory: str                    # the memory node operands must reside in
+    instructions: frozenset[str]   # needle-name prefixes it can execute
+    flops_per_sec: float
+    matmul_tile: tuple[int, int, int] = (128, 128, 128)
+    vector_lanes: int = 8 * 128    # VPU elements per cycle
+    clock_hz: float = 0.94e9
+
+    def executes(self, needle_name: str) -> bool:
+        return any(needle_name.startswith(p) for p in self.instructions)
+
+
+@dataclass(frozen=True)
+class MoveEdge:
+    src: str
+    dst: str
+    bandwidth: float               # bytes / sec
+    latency: float                 # sec per transfer issue
+    issuer: str = "host"           # device that emits the copy instruction
+
+
+@dataclass
+class SystemGraph:
+    name: str
+    memories: dict[str, MemoryNode] = field(default_factory=dict)
+    computes: dict[str, ComputeNode] = field(default_factory=dict)
+    edges: list[MoveEdge] = field(default_factory=list)
+
+    # -- construction -------------------------------------------------------
+    def add_memory(self, name: str, capacity: int, level: int) -> None:
+        self.memories[name] = MemoryNode(name, capacity, level)
+
+    def add_compute(self, name: str, memory: str, instructions, flops: float,
+                    **kw) -> None:
+        self.computes[name] = ComputeNode(name, memory, frozenset(instructions),
+                                          flops, **kw)
+
+    def add_edge(self, src: str, dst: str, bandwidth: float,
+                 latency: float = 1e-6, issuer: str = "host",
+                 bidirectional: bool = True) -> None:
+        self.edges.append(MoveEdge(src, dst, bandwidth, latency, issuer))
+        if bidirectional:
+            self.edges.append(MoveEdge(dst, src, bandwidth, latency, issuer))
+
+    # -- queries --------------------------------------------------------------
+    def edge(self, src: str, dst: str) -> MoveEdge:
+        for e in self.edges:
+            if e.src == src and e.dst == dst:
+                return e
+        raise KeyError(f"no edge {src} -> {dst}")
+
+    def out_edges(self, src: str) -> list[MoveEdge]:
+        return [e for e in self.edges if e.src == src]
+
+    def shortest_path(self, src: str, dst: str,
+                      nbytes: int = 1 << 20) -> list[MoveEdge]:
+        """Min-cost path by modeled transfer time of ``nbytes`` (paper 3.5:
+        'simply finding a shortest-path tends to work relatively well')."""
+        if src == dst:
+            return []
+        dist = {src: 0.0}
+        prev: dict[str, MoveEdge] = {}
+        pq = [(0.0, src)]
+        while pq:
+            d, u = heapq.heappop(pq)
+            if u == dst:
+                break
+            if d > dist.get(u, float("inf")):
+                continue
+            for e in self.out_edges(u):
+                nd = d + e.latency + nbytes / e.bandwidth
+                if nd < dist.get(e.dst, float("inf")):
+                    dist[e.dst] = nd
+                    prev[e.dst] = e
+                    heapq.heappush(pq, (nd, e.dst))
+        if dst not in prev:
+            raise KeyError(f"no path {src} -> {dst}")
+        path, cur = [], dst
+        while cur != src:
+            e = prev[cur]
+            path.append(e)
+            cur = e.src
+        return list(reversed(path))
+
+    def compute_nodes_for(self, needle_name: str) -> list[ComputeNode]:
+        return [c for c in self.computes.values() if c.executes(needle_name)]
+
+    def memory_of(self, compute: str) -> MemoryNode:
+        return self.memories[self.computes[compute].memory]
+
+
+# --------------------------------------------------------------------------- #
+# Hardware constants (v5e) — shared with the roofline analysis
+# --------------------------------------------------------------------------- #
+
+V5E_PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+V5E_HBM_BW = 819e9             # bytes/s
+V5E_HBM_BYTES = 16 << 30
+V5E_VMEM_BYTES = 128 << 20
+V5E_ICI_BW = 50e9              # bytes/s per link
+V5E_CLOCK = 0.94e9
+
+
+def tpu_v5e(n_cores: int = 1, host_mem: int = 512 << 30) -> SystemGraph:
+    """One v5e chip (or several connected by ICI) as a system graph."""
+    g = SystemGraph(f"tpu_v5e_x{n_cores}")
+    g.add_memory("host", host_mem, level=0)
+    for c in range(n_cores):
+        hbm, vmem = f"hbm{c}", f"vmem{c}"
+        g.add_memory(hbm, V5E_HBM_BYTES, level=1)
+        g.add_memory(vmem, V5E_VMEM_BYTES, level=2)
+        g.add_edge("host", hbm, bandwidth=32e9, latency=2e-6)       # PCIe
+        g.add_edge(hbm, vmem, bandwidth=V5E_HBM_BW, latency=1e-7,
+                   issuer=f"core{c}")
+        g.add_compute(
+            f"core{c}", vmem,
+            {"mxu.", "vpu.", "fused."},
+            flops=V5E_PEAK_FLOPS,
+            matmul_tile=(128, 128, 128), vector_lanes=8 * 128,
+            clock_hz=V5E_CLOCK)
+        if c:  # ICI ring neighbour
+            g.add_edge(f"hbm{c - 1}", hbm, bandwidth=V5E_ICI_BW, latency=1e-6,
+                       issuer=f"core{c}")
+    return g
+
+
+def paper_accelerator(n_clusters: int = 2, regfile_bytes: int = 8 << 20,
+                      hbm_modules: int = 2) -> SystemGraph:
+    """The paper's case-study architecture (Section 5): clusters of paired
+    matrix/elementwise processing units sharing large register files, several
+    HBM modules, no cache hierarchy — all memory explicitly managed."""
+    g = SystemGraph(f"paper_accel_x{n_clusters}")
+    g.add_memory("host", 512 << 30, level=0)
+    for m in range(hbm_modules):
+        g.add_memory(f"hbm{m}", 8 << 30, level=1)
+        g.add_edge("host", f"hbm{m}", bandwidth=32e9, latency=2e-6)
+    for c in range(n_clusters):
+        rf = f"rf{c}"
+        g.add_memory(rf, regfile_bytes, level=2)
+        for m in range(hbm_modules):
+            g.add_edge(f"hbm{m}", rf, bandwidth=400e9, latency=2e-7,
+                       issuer=f"pu{c}a")
+        # the paired processing units sharing one register file set
+        for suffix in ("a", "b"):
+            g.add_compute(
+                f"pu{c}{suffix}", rf,
+                {"mxu.", "vpu.", "fused."},
+                flops=25e12, matmul_tile=(64, 64, 64), vector_lanes=256,
+                clock_hz=1.0e9)
+    return g

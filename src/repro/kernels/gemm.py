@@ -1,0 +1,129 @@
+"""Pallas TPU GEMM kernel — the MXU "matmul instruction" ISAM maps onto.
+
+The kernel is a classic blocked matmul: grid (M/bm, N/bn, K/bk) with the
+reduction dimension innermost; each grid step loads (bm, bk) and (bk, bn)
+VMEM tiles via BlockSpec and accumulates into the revisited (bm, bn) output
+block.  Block shapes are *parameters*: the ISAM scheduler's compute-tile
+choice (scheduler.py) is forwarded here as the BlockSpec tiling — this is the
+TPU-native realisation of the paper's "emit instruction stream + memory
+movement": the BlockSpec pipeline IS the HBM->VMEM copy schedule.
+
+Targeted at TPU (MXU-aligned 128x128x128 default tile); validated on CPU via
+``interpret=True``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _matmul_kernel(a_ref, b_ref, c_ref, *, k_steps: int):
+    """One (i, j, k) grid step: c[i, j] (+)= a[i, k] @ b[k, j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    c_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=c_ref.dtype)
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gemm(a: jax.Array, b: jax.Array,
+         block: tuple[int, int, int] = (128, 128, 128),
+         interpret: bool | None = None) -> jax.Array:
+    """C = A @ B with explicit VMEM tiling.
+
+    ``block=(bm, bn, bk)`` is the VMEM tile shape — normally chosen by the
+    ISAM scheduler (see ops.scheduled_gemm).  Inputs whose dimensions don't
+    divide the block are padded up and the result cropped; zero padding is
+    exact for the contraction.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
+
+    acc_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float32) else a.dtype
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), acc_dtype),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n].astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "fn"))
+def gemm_bias_act(a: jax.Array, b: jax.Array, bias: jax.Array,
+                  fn: str = "",
+                  block: tuple[int, int, int] = (128, 128, 128),
+                  interpret: bool | None = None) -> jax.Array:
+    """The paper's fused instruction: act(A @ B + bias) in one kernel —
+    the epilogue runs on the VPU while the block is still VMEM-resident."""
+    if interpret is None:
+        interpret = default_interpret()
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
+    mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    bias_p = jnp.pad(bias, (0, np_ - n)) if np_ != n else bias
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    def kernel(a_ref, b_ref, bias_ref, c_ref):
+        @pl.when(pl.program_id(2) == 0)
+        def _init():
+            c_ref[...] = jnp.zeros_like(c_ref)
+
+        c_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                              preferred_element_type=c_ref.dtype)
+
+        @pl.when(pl.program_id(2) == grid[2] - 1)
+        def _epilogue():
+            acc = c_ref[...] + bias_ref[...]
+            if fn == "sigmoid":
+                acc = jax.nn.sigmoid(acc)
+            elif fn == "tanh":
+                acc = jnp.tanh(acc)
+            elif fn == "relu":
+                acc = jnp.maximum(acc, 0)
+            c_ref[...] = acc
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p, bias_p)
+    return out[:m, :n].astype(a.dtype)

@@ -1,0 +1,114 @@
+"""Fused GRU cell — the kernel ISAM's GRU schedule corresponds to (Fig. 4).
+
+One ``pl.pallas_call`` computes all three gates and the state update for a
+(batch-block x hidden-block) tile: six matmuls on the MXU with the gate
+arithmetic fused as the VPU epilogue, hidden state kept VMEM-resident.  This
+is the hand-written equivalent of the instruction stream ISAM derives
+automatically (fused.matmul_bias_sigmoid + vpu ops) — the benchmark compares
+the ISAM schedule's modeled cycles against a kernel-library-style unfused
+op-by-op execution.
+
+The hidden state ``h`` is passed twice: once full-width (for the U-matmul
+reductions) and once as the elementwise (bb, bh) block — the two views let
+BlockSpec express both access patterns of the same array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .gemm import _cdiv, default_interpret
+
+PARAM_NAMES = ("Wr", "Ur", "Wz", "Uz", "Wn", "Un", "br", "bz", "bnx", "bnh")
+
+
+def _gru_kernel(x_ref, hfull_ref, h_ref,
+                wr_ref, ur_ref, wz_ref, uz_ref, wn_ref, un_ref,
+                br_ref, bz_ref, bnx_ref, bnh_ref,
+                out_ref):
+    f32 = jnp.float32
+    x = x_ref[...].astype(f32)
+    hf = hfull_ref[...].astype(f32)
+    h = h_ref[...].astype(f32)
+    r = jax.nn.sigmoid(jnp.dot(x, wr_ref[...].astype(f32),
+                               preferred_element_type=f32)
+                       + jnp.dot(hf, ur_ref[...].astype(f32),
+                                 preferred_element_type=f32)
+                       + br_ref[...])
+    z = jax.nn.sigmoid(jnp.dot(x, wz_ref[...].astype(f32),
+                               preferred_element_type=f32)
+                       + jnp.dot(hf, uz_ref[...].astype(f32),
+                                 preferred_element_type=f32)
+                       + bz_ref[...])
+    n = jnp.tanh(jnp.dot(x, wn_ref[...].astype(f32),
+                         preferred_element_type=f32)
+                 + r * (jnp.dot(hf, un_ref[...].astype(f32),
+                                preferred_element_type=f32) + bnh_ref[...])
+                 + bnx_ref[...])
+    out_ref[...] = ((1 - z) * n + z * h).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gru_cell(x: jax.Array, h: jax.Array, params: dict,
+             block: tuple[int, int] = (128, 128),
+             interpret: bool | None = None) -> jax.Array:
+    """One fused GRU step: x (B, E), h (B, H) -> h' (B, H)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, E = x.shape
+    _, H = h.shape
+    bb, bh = min(block[0], B), min(block[1], H)
+    Bp, Hp = _cdiv(B, bb) * bb, _cdiv(H, bh) * bh
+
+    x_p = jnp.pad(x, ((0, Bp - B), (0, 0))) if Bp != B else x
+    h_p = jnp.pad(h, ((0, Bp - B), (0, Hp - H))) if (Bp, Hp) != (B, H) else h
+
+    def padw(w):  # (E or H, H) -> pad output dim
+        return jnp.pad(w, ((0, 0), (0, Hp - H))) if Hp != H else w
+
+    def padu(u):  # (H, H) -> pad both
+        return jnp.pad(u, ((0, Hp - H), (0, Hp - H))) if Hp != H else u
+
+    def padb(b):
+        return jnp.pad(b, (0, Hp - H)) if Hp != H else b
+
+    grid = (Bp // bb, Hp // bh)
+    w_spec = pl.BlockSpec((E, bh), lambda i, j: (0, j))
+    u_spec = pl.BlockSpec((Hp, bh), lambda i, j: (0, j))
+    b_spec = pl.BlockSpec((bh,), lambda i, j: (j,))
+
+    out = pl.pallas_call(
+        _gru_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, E), lambda i, j: (i, 0)),    # x
+            pl.BlockSpec((bb, Hp), lambda i, j: (i, 0)),   # h (full width)
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),   # h (ew block)
+            w_spec, u_spec, w_spec, u_spec, w_spec, u_spec,
+            b_spec, b_spec, b_spec, b_spec,
+        ],
+        out_specs=pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Hp), x.dtype),
+        interpret=interpret,
+    )(x_p, h_p, h_p,
+      padw(params["Wr"]), padu(params["Ur"]),
+      padw(params["Wz"]), padu(params["Uz"]),
+      padw(params["Wn"]), padu(params["Un"]),
+      padb(params["br"]), padb(params["bz"]),
+      padb(params["bnx"]), padb(params["bnh"]))
+    return out[:B, :H]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gru_seq(xs: jax.Array, h0: jax.Array, params: dict,
+            block: tuple[int, int] = (128, 128),
+            interpret: bool | None = None) -> jax.Array:
+    """GRU over [T, B, E] — the 128-step RNN of the paper's Figure 4.
+    Weights stay device-resident across steps (the recursive iteration)."""
+    def step(h, x):
+        return gru_cell(x, h, params, block=block, interpret=interpret), None
+    h, _ = jax.lax.scan(step, h0, xs)
+    return h

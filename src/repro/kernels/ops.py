@@ -1,0 +1,65 @@
+"""Jit'd wrappers + the ISAM -> Pallas bridge.
+
+``scheduled_gemm`` is the end-to-end TPU story: the ISAM pipeline (map ->
+select -> schedule against the v5e system graph) decides the compute-tile
+shape, and that decision becomes the Pallas BlockSpec tiling.  The compiler
+output *is* the kernel configuration — no hand-written lowering rule.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from ..core import instructions as I
+from ..core import kernels_ir as K
+from ..core.approach import Approach, GreedyApproach
+from ..core.isel import select_instructions
+from ..core.scheduler import Schedule, schedule
+from ..core.sysgraph import SystemGraph, tpu_v5e
+from . import gemm as gemm_kernel
+from . import gru as gru_kernel
+from .gemm import gemm, gemm_bias_act
+from .gru import gru_cell, gru_seq
+
+
+@functools.lru_cache(maxsize=256)
+def plan_gemm(m: int, n: int, k: int,
+              approach: str = "greedy") -> tuple[tuple[int, int, int], float]:
+    """Run the ISAM pipeline on an (m, n, k) GEMM against the v5e graph;
+    return (chosen tile (bm, bn, bk), modeled seconds)."""
+    prog = K.matmul(m, n, k)
+    sel = select_instructions(prog, [I.mxu_matmul()], allow_transforms=False)
+    app: Approach = GreedyApproach()
+    if approach == "costmodel":
+        from ..core.approach import CostModelApproach
+        app = CostModelApproach(samples=4)
+    sched = schedule(sel, tpu_v5e(1), app)
+    tile = _tile_from_schedule(sched)
+    return tile, sched.makespan
+
+
+def _tile_from_schedule(sched: Schedule) -> tuple[int, int, int]:
+    """Extract the (bm, bn, bk) compute-tile shape the scheduler settled on."""
+    for op in sched.ops:
+        if op.kind != "compute":
+            continue
+        sizes = op.tile.sizes
+        # haystack axes are named i/j/k for K.matmul programs
+        return (sizes.get("i", 128), sizes.get("j", 128), sizes.get("k", 128))
+    raise ValueError("schedule contains no compute tiles")
+
+
+def scheduled_gemm(a: jax.Array, b: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """GEMM whose BlockSpec tiling was chosen by the ISAM scheduler."""
+    m, k = a.shape
+    _, n = b.shape
+    tile, _ = plan_gemm(m, n, k)
+    return gemm(a, b, block=tile, interpret=interpret)
+
+
+__all__ = [
+    "gemm", "gemm_bias_act", "gru_cell", "gru_seq",
+    "plan_gemm", "scheduled_gemm",
+]

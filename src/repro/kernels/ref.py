@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(a.dtype)
+
+
+def gemm_bias_act_ref(a, b, bias, fn: str = "") -> jax.Array:
+    out = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)) + bias
+    if fn == "sigmoid":
+        out = jax.nn.sigmoid(out)
+    elif fn == "tanh":
+        out = jnp.tanh(out)
+    elif fn == "relu":
+        out = jnp.maximum(out, 0)
+    return out.astype(a.dtype)
+
+
+def gru_cell_ref(x, h, params) -> jax.Array:
+    """r/z/n-gate GRU step (same convention as core.kernels_ir.gru_cell)."""
+    f32 = jnp.float32
+    x, h = x.astype(f32), h.astype(f32)
+    r = jax.nn.sigmoid(x @ params["Wr"] + h @ params["Ur"] + params["br"])
+    z = jax.nn.sigmoid(x @ params["Wz"] + h @ params["Uz"] + params["bz"])
+    n = jnp.tanh(x @ params["Wn"] + r * (h @ params["Un"] + params["bnh"])
+                 + params["bnx"])
+    return ((1 - z) * n + z * h).astype(x.dtype)
+
+
+def gru_seq_ref(xs, h0, params) -> jax.Array:
+    """GRU over a [T, B, E] sequence; returns final hidden state."""
+    def step(h, x):
+        return gru_cell_ref(x, h, params), None
+    h, _ = jax.lax.scan(step, h0, xs)
+    return h

@@ -1,0 +1,83 @@
+"""train_step / serve_step builders shared by the dry-run, the trainer and
+the server.  Everything is built AOT-friendly: callers lower these with
+ShapeDtypeStructs and explicit in/out shardings."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..models import build_model
+from ..models.config import ModelConfig, ShapeConfig
+from ..optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    model = build_model(cfg)
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state: OptState, batch):
+        if grad_accum > 1:
+            def micro(c, mb):
+                loss, grads = jax.value_and_grad(model.loss)(params, mb)
+                acc_loss, acc_g = c
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_g, grads)), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbs = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+            (loss, grads), _ = jax.lax.scan(micro, (jnp.zeros(()), zeros), mbs)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state,
+                                                   opt_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return model, train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int = 0):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=max_len)
+
+    return model, prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, cache, tokens, pos) -> (next_token_logits,
+    cache).  For decode shapes the dry-run lowers THIS function (one new
+    token against a seq_len-deep cache), not train_step."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return logits, cache
+
+    return model, serve_step
+
+
+def eval_shape_params(cfg: ModelConfig):
+    """Parameter shapes without allocating anything."""
+    model = build_model(cfg)
+    return model, jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def eval_shape_opt_state(params_shape):
+    return jax.eval_shape(lambda p: init_opt_state(p), params_shape)
+
+
+def eval_shape_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, seq_len))

@@ -1,0 +1,6 @@
+from .api import build_model
+from .config import (FULL_ATTENTION_ARCHS, SHAPES, ModelConfig, ShapeConfig,
+                     shape_applicable)
+
+__all__ = ["build_model", "ModelConfig", "ShapeConfig", "SHAPES",
+           "FULL_ATTENTION_ARCHS", "shape_applicable"]

@@ -1,0 +1,26 @@
+"""Uniform model API: build_model(cfg) returns an object exposing
+
+    init(rng) -> params
+    logits(params, batch) -> (B, T, V)
+    loss(params, batch) -> scalar
+    init_cache(batch, seq_len) -> cache pytree
+    prefill(params, batch) -> (cache, last_logits)
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from .config import ModelConfig
+from .hybrid import HybridLM
+from .transformer import DecoderLM
+from .whisper import WhisperModel
+from .xlstm_lm import XLSTMLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return WhisperModel(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "ssm":
+        return XLSTMLM(cfg)
+    return DecoderLM(cfg)   # dense | moe | vlm

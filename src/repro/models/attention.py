@@ -1,0 +1,211 @@
+"""Attention: GQA, causal / sliding-window masks, rotary, KV-cache decode.
+
+Shapes follow (B, T, H, hd).  GQA repeats KV heads by gather-free reshape;
+sliding-window attention masks beyond the window (Mixtral).  Decode attends a
+single query token against the cache — for SWA the cache is a rolling buffer
+of ``window`` positions, which is what makes 500k-token contexts O(window).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.ctx import constrain
+from .config import ModelConfig
+from .layers import apply_rotary, init_dense, rotary
+
+NEG_INF = -1e30
+
+
+def init_attn_params(rng, cfg: ModelConfig, dtype) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": init_dense(ks[0], D, H * hd, dtype),
+        "wk": init_dense(ks[1], D, KV * hd, dtype),
+        "wv": init_dense(ks[2], D, KV * hd, dtype),
+        "wo": init_dense(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.dot(x, p["wq"])
+    k = jnp.dot(x, p["wk"])
+    v = jnp.dot(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (constrain(q.reshape(B, T, H, hd), "heads"),
+            constrain(k.reshape(B, T, KV, hd), "heads"),
+            constrain(v.reshape(B, T, KV, hd), "heads"))
+
+
+def _expand_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each KV head."""
+    B, S, KV, hd = k.shape
+    rep = n_heads // KV
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, S, KV, rep, hd)) \
+              .reshape(B, S, n_heads, hd)
+
+
+#: query-chunk size above which attention runs chunked (memory O(T*chunk))
+ATTN_CHUNK = 2048
+
+
+def _attend(q, k, v, positions, cfg: ModelConfig, causal: bool) -> jax.Array:
+    """Softmax attention on projected/rotated q, k, v (B, T|S, H, hd).
+    Long sequences are processed in query chunks (lax.scan): exact softmax
+    per row, activation memory O(T * chunk) instead of O(T^2)."""
+    B, T, H, hd = q.shape
+    S = k.shape[1]
+
+    def block(q_blk, pos_blk):
+        scores = constrain(jnp.einsum("bthd,bshd->bhts", q_blk, k),
+                           "scores") / (hd ** 0.5)
+        if causal:
+            i = pos_blk[:, None]
+            j = positions[None, :S] if positions.shape[0] >= S \
+                else jnp.arange(S)[None, :]
+            mask = j <= i
+            if cfg.sliding_window:
+                mask &= j > i - cfg.sliding_window
+            scores = jnp.where(mask[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1
+                           ).astype(q_blk.dtype)
+        return jnp.einsum("bhts,bshd->bthd", w, v)
+
+    if T <= ATTN_CHUNK or T % ATTN_CHUNK:
+        return block(q, positions)
+
+    nc = T // ATTN_CHUNK
+    qc = jnp.moveaxis(q.reshape(B, nc, ATTN_CHUNK, H, hd), 1, 0)
+    pc = positions.reshape(nc, ATTN_CHUNK)
+
+    def body(_, xs):
+        qb, pb = xs
+        return None, block(qb, pb)
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))      # (nc, B, c, H, hd)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, T, H, hd)
+
+
+def attention(p: dict, x: jax.Array, cfg: ModelConfig,
+              causal: bool = True, positions: jax.Array | None = None) -> jax.Array:
+    """Full self-attention over (B, T, D)."""
+    B, T, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q, k, v = _project_qkv(p, x, cfg)
+    if positions is None:
+        positions = jnp.arange(T)
+    cos, sin = rotary(positions, hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    out = _attend(q, k, v, positions, cfg, causal)
+    out = constrain(out, "heads").reshape(B, T, H * hd)
+    return constrain(jnp.dot(out, p["wo"]), "residual")
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache serving
+# --------------------------------------------------------------------------- #
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> dict:
+    """Cache for one attention layer.  SWA archs keep a rolling buffer of
+    ``sliding_window`` slots; full attention keeps all ``seq_len``."""
+    S = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, S, KV, hd), dtype),
+        "v": jnp.zeros((batch, S, KV, hd), dtype),
+    }
+
+
+def prefill_attention(p, x, cfg: ModelConfig, max_len: int = 0):
+    """Run attention AND return the layer cache, sized for subsequent decode
+    up to ``max_len`` positions (rolling buffer for SWA).  QKV is projected
+    once and shared between the attention output and the cache."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = jnp.arange(T)
+    cos, sin = rotary(pos, cfg.hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    out = _attend(q, _expand_kv(k, H), _expand_kv(v, H), pos, cfg,
+                  causal=True)
+    out = constrain(out, "heads").reshape(B, T, H * cfg.hd)
+    out = constrain(jnp.dot(out, p["wo"]), "residual")
+    max_len = max(max_len, T)
+    if cfg.sliding_window:
+        S = min(cfg.sliding_window, max_len)
+        if T > S:
+            k, v = k[:, -S:], v[:, -S:]
+        elif S > T:
+            k = jnp.pad(k, ((0, 0), (0, S - T), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, S - T), (0, 0), (0, 0)))
+        # rolling-buffer layout: position p lives at slot p % S
+        k = jnp.roll(k, T % S if T > S else 0, axis=1)
+        v = jnp.roll(v, T % S if T > S else 0, axis=1)
+    elif max_len > T:
+        k = jnp.pad(k, ((0, 0), (0, max_len - T), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, max_len - T), (0, 0), (0, 0)))
+    return out, {"k": k, "v": v}
+
+
+def decode_attention(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                     cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, D), cache K/V (B, S, KV, hd), pos scalar
+    (current absolute position).  Returns (out (B, 1, D), new cache)."""
+    B, _, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = cache["k"].shape[1]
+    q, k, v = _project_qkv(p, x, cfg)
+    cos, sin = rotary(pos[None], hd, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+
+    slot = pos % S if cfg.sliding_window else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+
+    kk = _expand_kv(ck, H)   # (B, S, H, hd)
+    vv = _expand_kv(cv, H)
+    scores = jnp.einsum("bthd,bshd->bhts", q, kk)[:, :, 0] / (hd ** 0.5)
+    span = jnp.arange(S)
+    if cfg.sliding_window:
+        age = (pos % S - span) % S          # rolling-buffer age of each slot
+        valid = (age < cfg.sliding_window) & (span < S) & (age <= pos)
+    else:
+        valid = span <= pos
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhs,bshd->bhd", w, vv).reshape(B, 1 * H * hd)
+    out = jnp.dot(out, p["wo"]).reshape(B, 1, D)
+    return out, {"k": ck, "v": cv}
+
+
+def cross_attention(p: dict, x: jax.Array, kv_src: jax.Array,
+                    cfg: ModelConfig) -> jax.Array:
+    """Encoder-decoder cross attention (whisper): queries from x, keys and
+    values from the encoder output (no mask, no rotary)."""
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    S = kv_src.shape[1]
+    q = jnp.dot(x, p["wq"]).reshape(B, T, H, hd)
+    k = jnp.dot(kv_src, p["wk"]).reshape(B, S, KV, hd)
+    v = jnp.dot(kv_src, p["wv"]).reshape(B, S, KV, hd)
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k) / (hd ** 0.5)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", w, v).reshape(B, T, H * hd)
+    return jnp.dot(out, p["wo"])

@@ -1,0 +1,252 @@
+"""Jamba-style hybrid LM: Mamba + attention interleaved 7:1, MoE every
+``moe_period``-th FFN (Jamba-1.5: every 2nd — 398B total / ~94B active).
+
+The stack is organised as macro-blocks of ``attn_period`` layers.  Within a
+block the Mamba sublayers are grouped by FFN kind (dense-FFN group, then
+MoE-FFN group, then the attention+MoE layer) so each group is one
+``lax.scan`` over homogeneous stacked parameters — same parameter count,
+FLOPs and sharding as the published interleave; only the within-block order
+of the dense/MoE FFNs differs (noted in DESIGN.md)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention, decode_attention, init_attn_params,
+                        init_kv_cache, prefill_attention)
+from .config import ModelConfig
+from .layers import cross_entropy_loss, init_dense, norm_fn
+from .mamba import (init_mamba_params, init_mamba_state, mamba_block,
+                    mamba_decode_step)
+from .transformer import ffn, init_ffn_params
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.attn_period >= 2
+        assert cfg.n_layers % cfg.attn_period == 0
+        self.cfg = cfg
+        self.nb = cfg.n_layers // cfg.attn_period
+        nm = cfg.attn_period - 1               # mamba sublayers per block
+        per_block_moe = (cfg.attn_period // cfg.moe_period
+                         if cfg.n_experts else 0)
+        # the attention layer takes one MoE slot when any exist
+        self.n_moe_mamba = max(per_block_moe - 1, 0)
+        self.n_dense_mamba = nm - self.n_moe_mamba
+        self.dense_cfg = cfg.scaled(n_experts=0, top_k=0)
+        self.attn_ffn_cfg = cfg if per_block_moe else self.dense_cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+
+    # ---- init ---------------------------------------------------------------
+    def _init_mamba_sub(self, k, sub_cfg):
+        k1, k2 = jax.random.split(k)
+        return {"mamba": init_mamba_params(k1, self.cfg, self.pdtype),
+                "ffn": init_ffn_params(k2, sub_cfg, self.pdtype),
+                "norm1": jnp.ones((self.cfg.d_model,), jnp.float32),
+                "norm2": jnp.ones((self.cfg.d_model,), jnp.float32)}
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 6)
+
+        def stacked(key, n, sub_cfg):
+            kk = jax.random.split(key, self.nb * n)
+            p = jax.vmap(lambda k: self._init_mamba_sub(k, sub_cfg))(kk)
+            return jax.tree.map(
+                lambda a: a.reshape((self.nb, n) + a.shape[1:]), p)
+
+        def init_attn_sub(k):
+            k1, k2 = jax.random.split(k)
+            return {"attn": init_attn_params(k1, cfg, self.pdtype),
+                    "ffn": init_ffn_params(k2, self.attn_ffn_cfg,
+                                           self.pdtype),
+                    "norm1": jnp.ones((cfg.d_model,), jnp.float32),
+                    "norm2": jnp.ones((cfg.d_model,), jnp.float32)}
+
+        blocks = {
+            "dense": stacked(ks[0], self.n_dense_mamba, self.dense_cfg),
+            "attn": jax.vmap(init_attn_sub)(jax.random.split(ks[2], self.nb)),
+        }
+        if self.n_moe_mamba:
+            blocks["moe"] = stacked(ks[1], self.n_moe_mamba, cfg)
+        return {
+            "embed": (jax.random.normal(
+                ks[3], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(self.pdtype),
+            "blocks": blocks,
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": init_dense(ks[4], cfg.d_model, cfg.vocab_size,
+                                  self.pdtype),
+        }
+
+    def _cast(self, tree):
+        return jax.tree.map(
+            lambda a: a.astype(self.dtype) if a.dtype == self.pdtype else a,
+            tree)
+
+    # ---- shared block machinery ------------------------------------------------
+    def _mamba_sub_fwd(self, p, x, sub_cfg):
+        nf = norm_fn(self.cfg.norm)
+        x = x + mamba_block(p["mamba"], nf(x, p["norm1"]), self.cfg)
+        x = x + ffn(p["ffn"], nf(x, p["norm2"]), sub_cfg)
+        return x
+
+    def _attn_sub_fwd(self, p, x):
+        nf = norm_fn(self.cfg.norm)
+        x = x + attention(p["attn"], nf(x, p["norm1"]), self.cfg)
+        x = x + ffn(p["ffn"], nf(x, p["norm2"]), self.attn_ffn_cfg)
+        return x
+
+    # ---- training ---------------------------------------------------------------
+    def logits(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        x = jnp.take(params["embed"].astype(self.dtype), batch["tokens"],
+                     axis=0)
+
+        def block(h, bp):
+            def dsub(hh, mp):
+                return self._mamba_sub_fwd(self._cast(mp), hh,
+                                           self.dense_cfg), None
+            h, _ = jax.lax.scan(dsub, h, bp["dense"])
+            if self.n_moe_mamba:
+                def msub(hh, mp):
+                    return self._mamba_sub_fwd(self._cast(mp), hh, cfg), None
+                h, _ = jax.lax.scan(msub, h, bp["moe"])
+            h = self._attn_sub_fwd(self._cast(bp["attn"]), h)
+            return h, None
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+        x, _ = jax.lax.scan(block, x, params["blocks"])
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        return jnp.dot(x, params["lm_head"].astype(self.dtype))
+
+    def loss(self, params, batch) -> jax.Array:
+        logits = self.logits(params, batch)
+        return cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+
+    # ---- serving ------------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        kv = init_kv_cache(cfg, batch, seq_len, self.dtype)
+        kv = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (self.nb,) + a.shape), kv)
+        ms = init_mamba_state(cfg, batch, self.dtype)
+
+        def stack(n):
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None, None],
+                                           (self.nb, n) + a.shape), ms)
+        cache = {"kv": kv, "dense": stack(self.n_dense_mamba)}
+        if self.n_moe_mamba:
+            cache["moe"] = stack(self.n_moe_mamba)
+        return cache
+
+    def prefill(self, params, batch, max_len: int = 0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"].astype(self.dtype), batch["tokens"],
+                     axis=0)
+        nf = norm_fn(cfg.norm)
+
+        def block(h, bp):
+            def dsub(hh, mp):
+                mp = self._cast(mp)
+                st = _mamba_state_from_seq(mp, nf(hh, mp["norm1"]), cfg)
+                return self._mamba_sub_fwd(mp, hh, self.dense_cfg), st
+            h, dstates = jax.lax.scan(dsub, h, bp["dense"])
+            out_states = {"dense": dstates}
+            if self.n_moe_mamba:
+                def msub(hh, mp):
+                    mp = self._cast(mp)
+                    st = _mamba_state_from_seq(mp, nf(hh, mp["norm1"]), cfg)
+                    return self._mamba_sub_fwd(mp, hh, cfg), st
+                h, mstates = jax.lax.scan(msub, h, bp["moe"])
+                out_states["moe"] = mstates
+            ap = self._cast(bp["attn"])
+            a, kv = prefill_attention(ap["attn"], nf(h, ap["norm1"]), cfg,
+                                      max_len=max_len)
+            h = h + a
+            h = h + ffn(ap["ffn"], nf(h, ap["norm2"]), self.attn_ffn_cfg)
+            return h, (out_states, kv)
+
+        x, (states, kvs) = jax.lax.scan(block, x, params["blocks"])
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        logits = jnp.dot(x[:, -1:], params["lm_head"].astype(self.dtype))
+        cache = {"kv": kvs, **states}
+        return cache, logits
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"].astype(self.dtype), tokens[:, None],
+                     axis=0)
+        nf = norm_fn(cfg.norm)
+
+        def mamba_dec(hh, mp, st, sub_cfg):
+            dx, st2 = mamba_decode_step(mp["mamba"], nf(hh, mp["norm1"]),
+                                        st, cfg)
+            hh = hh + dx
+            hh = hh + ffn(mp["ffn"], nf(hh, mp["norm2"]), sub_cfg)
+            return hh, st2
+
+        def block(h, xs):
+            bp, kv_cache, dstate = xs[0], xs[1], xs[2]
+            mstate = xs[3] if self.n_moe_mamba else None
+
+            def dsub(hh, sub):
+                mp, st = sub
+                return mamba_dec(hh, self._cast(mp), st, self.dense_cfg)
+            h, d2 = jax.lax.scan(dsub, h, (bp["dense"], dstate))
+            m2 = None
+            if self.n_moe_mamba:
+                def msub(hh, sub):
+                    mp, st = sub
+                    return mamba_dec(hh, self._cast(mp), st, cfg)
+                h, m2 = jax.lax.scan(msub, h, (bp["moe"], mstate))
+            ap = self._cast(bp["attn"])
+            a, kv2 = decode_attention(ap["attn"], nf(h, ap["norm1"]),
+                                      kv_cache, pos, cfg)
+            h = h + a
+            h = h + ffn(ap["ffn"], nf(h, ap["norm2"]), self.attn_ffn_cfg)
+            return h, (d2, m2, kv2)
+
+        xs = [params["blocks"], cache["kv"], cache["dense"]]
+        if self.n_moe_mamba:
+            xs.append(cache["moe"])
+        x, (d2, m2, kv2) = jax.lax.scan(block, x, tuple(xs))
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        logits = jnp.dot(x, params["lm_head"].astype(self.dtype))[:, 0]
+        new_cache = {"kv": kv2, "dense": d2}
+        if self.n_moe_mamba:
+            new_cache["moe"] = m2
+        return logits, new_cache
+
+
+def _mamba_state_from_seq(mp, x_seq, cfg) -> dict:
+    """Decode-ready Mamba state after consuming x_seq (B, T, D): the final
+    SSM state (recomputed with a running scan) plus the causal-conv tail."""
+    from .mamba import _causal_conv
+
+    B, T, D = x_seq.shape
+    di = cfg.mamba_expand * D
+    ds = cfg.mamba_d_state
+    up = jnp.dot(x_seq, mp["mamba"]["w_in"])
+    xi = jax.nn.silu(_causal_conv(up[..., :di], mp["mamba"]["conv_w"],
+                                  mp["mamba"]["conv_b"]))
+    bcdt = jnp.dot(xi, mp["mamba"]["w_bcdt"])
+    Bm = bcdt[..., :ds].astype(jnp.float32)
+    dt = jax.nn.softplus(bcdt[..., -1:].astype(jnp.float32)
+                         + mp["mamba"]["dt_bias"])
+    A = -jnp.exp(mp["mamba"]["A_log"])
+    decay = jnp.exp(dt[..., None] * A[None, None])          # (B,T,di,ds)
+    inp = (dt * xi.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+
+    def step(h, xs):
+        d, i = xs
+        return d * h + i, None
+
+    h, _ = jax.lax.scan(step, jnp.zeros((B, di, ds), jnp.float32),
+                        (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(inp, 1, 0)))
+    dc = cfg.mamba_d_conv
+    conv_tail = up[..., :di][:, -(dc - 1):, :]
+    return {"h": h, "conv": conv_tail.astype(x_seq.dtype)}

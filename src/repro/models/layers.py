@@ -1,0 +1,76 @@
+"""Shared layer substrate: norms, rotary embedding, initializers, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def nonparam_ln(x, scale=None, eps: float = 1e-5):
+    """OLMo's non-parametric LayerNorm: no scale, no bias."""
+    del scale
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def norm_fn(kind: str):
+    return {"rmsnorm": rmsnorm, "nonparam_ln": nonparam_ln}[kind]
+
+
+def init_dense(rng, fan_in: int, fan_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (fan_in + fan_out)) ** 0.5
+    return (jax.random.normal(rng, (fan_in, fan_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rotary(pos: jax.Array, head_dim: int, theta: float) -> tuple:
+    """cos/sin tables at integer positions ``pos`` (any shape)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., T, H, hd); cos/sin: (T, hd/2) broadcast over batch/heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :] if cos.ndim < x.ndim - 1 else cos
+    s = sin[..., None, :] if sin.ndim < x.ndim - 1 else sin
+    # reshape cos/sin (T, half) -> broadcast to (..., T, 1, half)
+    while c.ndim < x.ndim:
+        c, s = c[None], s[None]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = jax.nn.silu(jnp.dot(x, w_gate))
+    u = jnp.dot(x, w_up)
+    return jnp.dot(g * u, w_down)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       mask: jax.Array | None = None) -> jax.Array:
+    """Stable next-token cross entropy; logits (B, T, V), labels (B, T).
+
+    The gold logit is extracted with a one-hot contraction rather than
+    take_along_axis so vocabulary-sharded logits never get all-gathered
+    (the contraction lowers to a per-shard dot + psum under GSPMD)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("...v,...v->...", logits, onehot)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GSPMD-friendly).
+
+Top-k routing materialises a (tokens, experts, capacity) dispatch tensor so
+expert compute is two dense einsums over an (E, C, D) layout — the standard
+expert-parallel pattern: the E dimension shards over the 'model' mesh axis
+(EP) when divisible, and expert weights shard internally (TP) otherwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.ctx import constrain
+from .config import ModelConfig
+from .layers import init_dense
+
+
+def init_moe_params(rng, cfg: ModelConfig, dtype) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(rng, 4)
+    return {
+        "router": init_dense(ks[0], D, E, jnp.float32),
+        "w_gate": init_dense(ks[1], D, F, dtype)[None].repeat(E, 0),
+        "w_up": init_dense(ks[2], D, F, dtype)[None].repeat(E, 0),
+        "w_down": init_dense(ks[3], F, D, dtype)[None].repeat(E, 0),
+    }
+
+
+MOE_GROUP = 4096  # tokens per dispatch group (keeps dispatch linear in N)
+
+
+def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D) through top-k experts with capacity.
+
+    Dispatch is **group-wise**: tokens are split into groups of at most
+    MOE_GROUP and each group gets its own capacity slice.  With a single
+    global queue the one-hot dispatch tensors are (N, E, C) with C
+    proportional to N — an O(N^2) term that dwarfed the expert GEMMs at
+    training shapes (measured: useful-flops ratio 0.001 on mixtral
+    train_4k).  Grouping keeps the tensors (G, n, E, c) with n, c fixed, so
+    dispatch cost stays a small constant fraction of expert compute."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * T
+    xf = x.reshape(N, D)
+
+    n = min(MOE_GROUP, N)
+    while N % n:
+        n -= 1
+    G = N // n
+    xg = xf.reshape(G, n, D)
+
+    logits = jnp.dot(xg.astype(jnp.float32), p["router"])        # (G, n, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)                # (G, n, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = max(1, int(cfg.capacity_factor * n * K / E))
+    # position of each (token, k) within its expert queue, per group
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)        # (G, n, K, E)
+    flat = onehot.reshape(G, n * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                        # (G, n*K, E)
+    pos = (pos * flat).sum(-1).reshape(G, n, K)
+    keep = pos < C
+
+    exp_oh = jax.nn.one_hot(gate_idx, E, dtype=xf.dtype)         # (G, n, K, E)
+    slot_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                             dtype=xf.dtype)[..., :C]            # (G, n, K, C)
+    disp = jnp.einsum("gnke,gnkc->gnec", exp_oh, slot_oh)
+    combine = jnp.einsum("gnk,gnke,gnkc->gnec",
+                         gate_vals.astype(xf.dtype), exp_oh, slot_oh)
+
+    xe = constrain(jnp.einsum("gnd,gnec->egcd", xg, disp), "expert_tokens4")
+    g = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["w_gate"]))
+    u = jnp.einsum("egcd,edf->egcf", xe, p["w_up"])
+    h = constrain(g * u, "expert_hidden4")
+    ye = constrain(jnp.einsum("egcf,efd->egcd", h, p["w_down"]),
+                   "expert_tokens4")                             # (E, G, c, D)
+    y = jnp.einsum("gnec,egcd->gnd", combine, ye)
+    return y.reshape(B, T, D)
+
+
+def moe_aux_loss(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    B, T, D = x.shape
+    logits = jnp.dot(x.reshape(-1, D).astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(jnp.argmax(probs, -1), cfg.n_experts), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac_tokens * frac_probs)

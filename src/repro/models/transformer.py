@@ -1,0 +1,194 @@
+"""Decoder-only transformer LM (dense / MoE / VLM backbone).
+
+Layers are parameter-stacked and driven by ``jax.lax.scan`` so compile time
+and HLO size are O(1) in depth — essential for the 512-device dry-runs.
+Remat (``jax.checkpoint``) wraps the scanned body when cfg.remat is set.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.ctx import constrain
+from .attention import (attention, decode_attention, init_attn_params,
+                        init_kv_cache, prefill_attention)
+from .config import ModelConfig
+from .layers import cross_entropy_loss, init_dense, norm_fn, swiglu
+from .moe import init_moe_params, moe_ffn
+
+
+def init_ffn_params(rng, cfg: ModelConfig, dtype) -> dict:
+    if cfg.n_experts:
+        return init_moe_params(rng, cfg, dtype)
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {"w_gate": init_dense(ks[0], D, F, dtype),
+            "w_up": init_dense(ks[1], D, F, dtype),
+            "w_down": init_dense(ks[2], F, D, dtype)}
+
+
+def ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.n_experts:
+        return moe_ffn(p, x, cfg)
+    g = jax.nn.silu(jnp.dot(x, p["w_gate"]))
+    u = jnp.dot(x, p["w_up"])
+    h = constrain(g * u, "ffn_hidden")
+    return constrain(jnp.dot(h, p["w_down"]), "residual")
+
+
+def init_layer_params(rng, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    p = {"attn": init_attn_params(k1, cfg, dtype),
+         "ffn": init_ffn_params(k2, cfg, dtype)}
+    if cfg.norm == "rmsnorm":
+        p["norm1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _norms(p, cfg):
+    nf = norm_fn(cfg.norm)
+    n1 = functools.partial(nf, scale=p.get("norm1"))
+    n2 = functools.partial(nf, scale=p.get("norm2"))
+    return n1, n2
+
+
+def layer_fwd(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    n1, n2 = _norms(p, cfg)
+    x = constrain(x, "residual")
+    x = x + attention(p["attn"], n1(x), cfg)
+    x = x + ffn(p["ffn"], n2(x), cfg)
+    return constrain(x, "residual")
+
+
+def layer_prefill(p: dict, x: jax.Array, cfg: ModelConfig, max_len: int = 0):
+    n1, n2 = _norms(p, cfg)
+    a, cache = prefill_attention(p["attn"], n1(x), cfg, max_len=max_len)
+    x = x + a
+    x = x + ffn(p["ffn"], n2(x), cfg)
+    return x, cache
+
+
+def layer_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                 cfg: ModelConfig):
+    n1, n2 = _norms(p, cfg)
+    a, cache = decode_attention(p["attn"], n1(x), cache, pos, cfg)
+    x = x + a
+    x = x + ffn(p["ffn"], n2(x), cfg)
+    return x, cache
+
+
+class DecoderLM:
+    """Families: dense (olmo/qwen*), moe (mixtral/phi3.5-moe), vlm (llava)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+
+    # ---- parameters -------------------------------------------------------
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 4)
+        layer_keys = jax.random.split(ks[0], cfg.n_layers)
+        layers = jax.vmap(
+            lambda k: init_layer_params(k, cfg, self.pdtype))(layer_keys)
+        p = {
+            "embed": (jax.random.normal(
+                ks[1], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(self.pdtype),
+            "layers": layers,
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = init_dense(ks[2], cfg.d_model, cfg.vocab_size,
+                                      self.pdtype)
+        return p
+
+    # ---- embedding / head ----------------------------------------------------
+    def _embed_tokens(self, params, batch) -> jax.Array:
+        x = constrain(jnp.take(params["embed"].astype(self.dtype),
+                               batch["tokens"], axis=0), "residual")
+        if self.cfg.family == "vlm" and "patch_embeds" in batch:
+            # anyres frontend stub: precomputed patch embeddings are prefixed
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(self.dtype), x], axis=1)
+        return x
+
+    def _head(self, params, x) -> jax.Array:
+        w = (params["embed"].T if self.cfg.tie_embeddings
+             else params["lm_head"]).astype(self.dtype)
+        return constrain(jnp.dot(x, w), "logits")
+
+    # ---- scanned layer stack ---------------------------------------------------
+    def _run_layers(self, params, x) -> jax.Array:
+        cfg = self.cfg
+        cast = functools.partial(jax.tree.map,
+                                 lambda a: a.astype(self.dtype)
+                                 if a.dtype == self.pdtype else a)
+
+        def body(h, layer_p):
+            return layer_fwd(cast(layer_p), h, cfg), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x
+
+    def logits(self, params, batch) -> jax.Array:
+        x = self._embed_tokens(params, batch)
+        x = self._run_layers(params, x)
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        return self._head(params, x)
+
+    def loss(self, params, batch) -> jax.Array:
+        logits = self.logits(params, batch)
+        T = batch["tokens"].shape[1]
+        logits_txt = logits[:, -T:]                      # vlm: text positions
+        return cross_entropy_loss(logits_txt[:, :-1], batch["tokens"][:, 1:])
+
+    # ---- serving ----------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        cfg = self.cfg
+        one = init_kv_cache(cfg, batch, seq_len, self.dtype)
+        return {"kv": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+            one)}
+
+    def prefill(self, params, batch, max_len: int = 0):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch)
+        cast = functools.partial(jax.tree.map,
+                                 lambda a: a.astype(self.dtype)
+                                 if a.dtype == self.pdtype else a)
+
+        def body(h, layer_p):
+            h2, cache = layer_prefill(cast(layer_p), h, cfg, max_len=max_len)
+            return h2, cache
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, caches = jax.lax.scan(body, x, params["layers"])
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        return {"kv": caches}, self._head(params, x[:, -1:])
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,) int32; pos scalar int32 absolute position."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"].astype(self.dtype), tokens[:, None],
+                     axis=0)
+        cast = functools.partial(jax.tree.map,
+                                 lambda a: a.astype(self.dtype)
+                                 if a.dtype == self.pdtype else a)
+
+        def body(h, xs):
+            layer_p, layer_cache = xs
+            h2, new_cache = layer_decode(cast(layer_p), h, layer_cache, pos,
+                                         cfg)
+            return h2, new_cache
+
+        x, new_caches = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        return self._head(params, x)[:, 0], {"kv": new_caches}

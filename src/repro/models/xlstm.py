@@ -1,0 +1,258 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential), interleaved mLSTM:sLSTM = 7:1.
+
+mLSTM training uses the chunkwise-parallel formulation: within a chunk the
+stabilized quadratic form, across chunks a (d_k x d_v) matrix-state carry —
+O(T·c) instead of O(T^2), which is what makes the 500k-token decode shape
+runnable (state is O(1) per step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.ctx import constrain
+from .config import ModelConfig
+from .layers import init_dense, norm_fn
+
+
+def init_mlstm_params(rng, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * D)
+    H = cfg.n_heads
+    dh = di // H
+    ks = jax.random.split(rng, 8)
+
+    def blockdiag(k):   # per-head block-diagonal projection (H, dh, dh)
+        return (jax.random.normal(k, (H, dh, dh), jnp.float32)
+                * (1.0 / dh) ** 0.5).astype(dtype)
+
+    return {
+        "w_in": init_dense(ks[0], D, 2 * di, dtype),    # up-proj (x, gate)
+        "wq": blockdiag(ks[1]),
+        "wk": blockdiag(ks[2]),
+        "wv": blockdiag(ks[3]),
+        "w_i": init_dense(ks[4], di, H, jnp.float32),   # input gate (per head)
+        "w_f": init_dense(ks[5], di, H, jnp.float32),   # forget gate
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.ones((H,), jnp.float32) * 3.0,       # open forget gates
+        "w_out": init_dense(ks[6], di, D, dtype),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise stabilized mLSTM.
+
+    q/k/v: (B, H, T, dk|dv); log_i/log_f: (B, H, T) log input/forget gates.
+    Returns (B, H, T, dv).
+    """
+    B, H, T, dk = q.shape
+    dv = v.shape[-1]
+    nc = T // chunk
+    qc = q.reshape(B, H, nc, chunk, dk)
+    kc = k.reshape(B, H, nc, chunk, dk)
+    vc = v.reshape(B, H, nc, chunk, dv)
+    ic = log_i.reshape(B, H, nc, chunk)
+    fc = log_f.reshape(B, H, nc, chunk)
+
+    csum_f = jnp.cumsum(fc, axis=-1)                     # within-chunk cumsum
+    f_total = csum_f[..., -1]                            # (B, H, nc)
+
+    def body(carry, xs):
+        C, n, m = carry      # (B,H,dk,dv), (B,H,dk), (B,H) running stabilizer
+        qt, kt, vt, it, ft_cum, ftot = xs
+        # decay from chunk start to position t: ft_cum
+        # inter-chunk contribution: q_t (C scaled by decay)
+        b = ft_cum + m[..., None]                         # log scale of carry
+        # intra-chunk: log weights  D_ts = cumF_t - cumF_s + i_s   (s <= t)
+        lw = (ft_cum[..., :, None] - ft_cum[..., None, :] + it[..., None, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(tri, lw, -jnp.inf)
+        m_intra = jnp.max(lw, axis=-1)                    # (B,H,c)
+        m_new = jnp.maximum(b, m_intra)                   # stabilizer per t
+        w_intra = jnp.exp(lw - m_new[..., None])          # (B,H,c,c)
+        scale_inter = jnp.exp(b - m_new)                  # (B,H,c)
+
+        qs = qt / (qt.shape[-1] ** 0.5)
+        attn = jnp.einsum("bhtk,bhsk->bhts", qs, kt) * w_intra
+        intra = jnp.einsum("bhts,bhsv->bhtv", attn, vt)
+        inter = jnp.einsum("bhtk,bhkv->bhtv", qs, C) * scale_inter[..., None]
+        # denominator: |q . n_t| with n_t the stabilized normalizer state
+        dot_n = attn.sum(-1) + jnp.einsum("bhtk,bhk->bht", qs, n) * scale_inter
+        denom = jnp.maximum(jnp.abs(dot_n), jnp.exp(-m_new))
+        out = (intra + inter) / denom[..., None]
+
+        # carry update: C' = exp(ftot + m - m')*C + sum_s exp(ftot - cumF_s + i_s - m') k_s v_s
+        m_next = jnp.maximum(ftot + m, jnp.max(
+            ftot[..., None] - ft_cum + it, axis=-1))
+        decay_old = jnp.exp(ftot + m - m_next)
+        w_new = jnp.exp(ftot[..., None] - ft_cum + it - m_next[..., None])
+        C2 = decay_old[..., None, None] * C + jnp.einsum(
+            "bhs,bhsk,bhsv->bhkv", w_new, kt, vt)
+        n2 = decay_old[..., None] * n + jnp.einsum("bhs,bhsk->bhk", w_new, kt)
+        return (C2, n2, m_next), out
+
+    C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+    n0 = jnp.zeros((B, H, dk), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    # q/k/v stay in the compute dtype (bf16): halves the dominant memory
+    # traffic; the f32 carry + stabilizers keep the recurrence exact enough
+    xs = (jnp.moveaxis(qc, 2, 0), jnp.moveaxis(kc, 2, 0),
+          jnp.moveaxis(vc, 2, 0),
+          jnp.moveaxis(ic, 2, 0), jnp.moveaxis(csum_f, 2, 0),
+          jnp.moveaxis(f_total, 2, 0))
+    _, outs = jax.lax.scan(body, (C0, n0, m0), xs)       # (nc, B, H, c, dv)
+    return jnp.moveaxis(outs, 0, 2).reshape(B, H, T, dv).astype(q.dtype)
+
+
+def mlstm_block(p: dict, x: jax.Array, cfg: ModelConfig,
+                chunk: int = 64) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D)."""
+    B, T, D = x.shape
+    H = cfg.n_heads
+    di = int(cfg.mlstm_proj_factor * D)
+    up = jnp.dot(x, p["w_in"])
+    xin, gate = up[..., :di], up[..., di:]
+    xh = xin.reshape(B, T, H, di // H)
+    q = jnp.einsum("bthd,hde->bhte", xh, p["wq"])
+    k = jnp.einsum("bthd,hde->bhte", xh, p["wk"])
+    v = jnp.einsum("bthd,hde->bhte", xh, p["wv"])
+    log_i = jax.nn.log_sigmoid(
+        jnp.dot(xin.astype(jnp.float32), p["w_i"]) + p["b_i"]).transpose(0, 2, 1)
+    log_f = jax.nn.log_sigmoid(
+        jnp.dot(xin.astype(jnp.float32), p["w_f"]) + p["b_f"]).transpose(0, 2, 1)
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    h = _mlstm_chunk_scan(q, k, v, log_i, log_f, c)
+    h = h.transpose(0, 2, 1, 3).reshape(B, T, di)
+    h = norm_fn("rmsnorm")(h, p["norm_scale"])
+    h = h * jax.nn.silu(gate)
+    return jnp.dot(h, p["w_out"])
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    dh = di // H
+    del dtype  # recurrent state is kept in f32 for stability
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, state: dict,
+                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Single-token recurrent step: x (B, 1, D) -> (B, 1, D); O(1) state."""
+    B, _, D = x.shape
+    H = cfg.n_heads
+    di = int(cfg.mlstm_proj_factor * D)
+    dh = di // H
+    up = jnp.dot(x[:, 0], p["w_in"])
+    xin, gate = up[..., :di], up[..., di:]
+    xh = xin.reshape(B, H, dh)
+    q = jnp.einsum("bhd,hde->bhe", xh, p["wq"]) / (dh ** 0.5)
+    k = jnp.einsum("bhd,hde->bhe", xh, p["wk"])
+    v = jnp.einsum("bhd,hde->bhe", xh, p["wv"])
+    log_i = jax.nn.log_sigmoid(
+        jnp.dot(xin.astype(jnp.float32), p["w_i"]) + p["b_i"])   # (B, H)
+    log_f = jax.nn.log_sigmoid(
+        jnp.dot(xin.astype(jnp.float32), p["w_f"]) + p["b_f"])
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    decay = jnp.exp(log_f + state["m"] - m_new)
+    inp = jnp.exp(log_i - m_new)
+    C = decay[..., None, None] * state["C"] + inp[..., None, None] \
+        * k[..., :, None] * v[..., None, :]
+    n = decay[..., None] * state["n"] + inp[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))[..., None]
+    h = (num / den).reshape(B, di)
+    h = norm_fn("rmsnorm")(h, p["norm_scale"])
+    h = h * jax.nn.silu(gate)
+    out = jnp.dot(h, p["w_out"]).reshape(B, 1, D).astype(x.dtype)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM — scalar memory, inherently sequential (scanned over time)
+# --------------------------------------------------------------------------- #
+
+
+def init_slstm_params(rng, cfg: ModelConfig, dtype) -> dict:
+    D = cfg.d_model
+    ks = jax.random.split(rng, 5)
+    return {
+        "w_z": init_dense(ks[0], D, D, dtype),
+        "w_i": init_dense(ks[1], D, D, dtype),
+        "w_f": init_dense(ks[2], D, D, dtype),
+        "w_o": init_dense(ks[3], D, D, dtype),
+        "r_z": init_dense(ks[4], D, D, dtype) * 0.1,   # recurrent weights
+        "b_z": jnp.zeros((D,), jnp.float32),
+        "b_i": jnp.zeros((D,), jnp.float32),
+        "b_f": jnp.ones((D,), jnp.float32) * 3.0,
+        "b_o": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.full((batch, D), -1e30, jnp.float32)}
+
+
+def _slstm_projections(p: dict, x: jax.Array):
+    """The four x-dependent pre-activations, hoisted OUT of the recurrence —
+    they are embarrassingly parallel over time (TP-shardable big matmuls),
+    leaving only the h @ r_z matvec inside the sequential scan."""
+    f32 = jnp.float32
+    zx = jnp.dot(x, p["w_z"]).astype(f32) + p["b_z"]
+    ix = jnp.dot(x, p["w_i"]).astype(f32) + p["b_i"]
+    fx = jnp.dot(x, p["w_f"]).astype(f32) + p["b_f"]
+    ox = jnp.dot(x, p["w_o"]).astype(f32) + p["b_o"]
+    return zx, ix, fx, ox
+
+
+def slstm_step(p: dict, pre: tuple, st: dict) -> tuple[dict, jax.Array]:
+    """One stabilized sLSTM step from precomputed projections."""
+    f32 = jnp.float32
+    zx, ix, fx, ox = pre
+    h_prev = st["h"].astype(p["r_z"].dtype)
+    z = jnp.tanh(zx + jnp.dot(h_prev, p["r_z"]).astype(f32))
+    log_i = ix
+    log_f = jax.nn.log_sigmoid(fx)
+    o = jax.nn.sigmoid(ox)
+    m_new = jnp.maximum(log_f + st["m"], log_i)
+    c = jnp.exp(log_f + st["m"] - m_new) * st["c"] + jnp.exp(log_i - m_new) * z
+    n = jnp.exp(log_f + st["m"] - m_new) * st["n"] + jnp.exp(log_i - m_new)
+    h = o * c / jnp.maximum(n, 1e-6)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_block(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, T, D) -> (B, T, D); projections batched, recurrence scanned."""
+    B, T, D = x.shape
+    st0 = init_slstm_state(cfg, B, x.dtype)
+    # gather the projections across the model axis ONCE — the sequential
+    # recurrence then runs fully local (no per-step collectives)
+    zx, ix, fx, ox = (constrain(a, "residual")
+                      for a in _slstm_projections(p, x))
+
+    def body(st, pre_t):
+        st2, h = slstm_step(p, pre_t, st)
+        return st2, h
+
+    pres = tuple(jnp.moveaxis(a, 1, 0) for a in (zx, ix, fx, ox))
+    _, hs = jax.lax.scan(body, st0, pres)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+
+
+def slstm_decode_step(p: dict, x: jax.Array, state: dict,
+                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    zx, ix, fx, ox = _slstm_projections(p, x[:, 0])
+    st2, h = slstm_step(p, (zx, ix, fx, ox), state)
+    return h[:, None].astype(x.dtype), st2

@@ -1,0 +1,137 @@
+"""xLSTM language model: macro-blocks of (slstm_period - 1) mLSTM blocks
+followed by one sLSTM block (the paper's xLSTM[7:1] layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cross_entropy_loss, init_dense, norm_fn
+from .xlstm import (init_mlstm_params, init_mlstm_state, init_slstm_params,
+                    init_slstm_state, mlstm_block, mlstm_decode_step,
+                    slstm_block, slstm_decode_step)
+
+
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.slstm_period >= 2
+        assert cfg.n_layers % cfg.slstm_period == 0
+        self.cfg = cfg
+        self.nb = cfg.n_layers // cfg.slstm_period
+        self.nm = cfg.slstm_period - 1
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(rng, 5)
+
+        def init_m(k):
+            return {"p": init_mlstm_params(k, cfg, self.pdtype),
+                    "norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+        def init_s(k):
+            return {"p": init_slstm_params(k, cfg, self.pdtype),
+                    "norm": jnp.ones((cfg.d_model,), jnp.float32)}
+
+        mkeys = jax.random.split(ks[0], self.nb * self.nm)
+        m_p = jax.vmap(init_m)(mkeys)
+        m_p = jax.tree.map(
+            lambda a: a.reshape((self.nb, self.nm) + a.shape[1:]), m_p)
+        s_p = jax.vmap(init_s)(jax.random.split(ks[1], self.nb))
+        return {
+            "embed": (jax.random.normal(
+                ks[2], (cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(self.pdtype),
+            "blocks": {"mlstm": m_p, "slstm": s_p},
+            "norm_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "lm_head": init_dense(ks[3], cfg.d_model, cfg.vocab_size,
+                                  self.pdtype),
+        }
+
+    def _cast(self, tree):
+        return jax.tree.map(
+            lambda a: a.astype(self.dtype) if a.dtype == self.pdtype else a,
+            tree)
+
+    def logits(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        nf = norm_fn(cfg.norm)
+        x = jnp.take(params["embed"].astype(self.dtype), batch["tokens"],
+                     axis=0)
+
+        def block(h, bp):
+            def msub(hh, mp):
+                mp = self._cast(mp)
+                return hh + mlstm_block(mp["p"], nf(hh, mp["norm"]), cfg), None
+            h, _ = jax.lax.scan(msub, h, bp["mlstm"])
+            sp = self._cast(bp["slstm"])
+            h = h + slstm_block(sp["p"], nf(h, sp["norm"]), cfg)
+            return h, None
+
+        if cfg.remat:
+            block = jax.checkpoint(block)
+        x, _ = jax.lax.scan(block, x, params["blocks"])
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        return jnp.dot(x, params["lm_head"].astype(self.dtype))
+
+    def loss(self, params, batch) -> jax.Array:
+        logits = self.logits(params, batch)
+        return cross_entropy_loss(logits[:, :-1], batch["tokens"][:, 1:])
+
+    # ---- serving: O(1) recurrent state, no KV cache -------------------------
+    def init_cache(self, batch: int, seq_len: int) -> dict:
+        del seq_len  # recurrent: state is sequence-length independent
+        cfg = self.cfg
+        m = init_mlstm_state(cfg, batch, self.dtype)
+        m = jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None, None], (self.nb, self.nm) + a.shape), m)
+        s = init_slstm_state(cfg, batch, self.dtype)
+        s = jax.tree.map(lambda a: jnp.broadcast_to(
+            a[None], (self.nb,) + a.shape), s)
+        return {"mlstm": m, "slstm": s}
+
+    def prefill(self, params, batch, max_len: int = 0):
+        """Consume the prompt stepwise (recurrent prefill) via decode_step
+        scanned over positions; returns final state + last logits."""
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        cache = self.init_cache(B, T)
+
+        def step(carry, t_tok):
+            cache = carry
+            logits, cache = self.decode_step(params, cache, t_tok,
+                                             jnp.int32(0))
+            return cache, logits
+
+        cache, logits = jax.lax.scan(step, cache, jnp.moveaxis(tokens, 1, 0))
+        return cache, logits[-1][:, None]
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        del pos  # recurrent
+        nf = norm_fn(cfg.norm)
+        x = jnp.take(params["embed"].astype(self.dtype), tokens[:, None],
+                     axis=0)
+
+        def block(h, xs):
+            bp, mstate, sstate = xs
+
+            def msub(hh, sub):
+                mp, st = sub
+                mp = self._cast(mp)
+                dx, st2 = mlstm_decode_step(mp["p"], nf(hh, mp["norm"]), st,
+                                            cfg)
+                return hh + dx, st2
+
+            h, m2 = jax.lax.scan(msub, h, (bp["mlstm"], mstate))
+            sp = self._cast(bp["slstm"])
+            dx, s2 = slstm_decode_step(sp["p"], nf(h, sp["norm"]), sstate, cfg)
+            h = h + dx
+            return h, (m2, s2)
+
+        x, (m2, s2) = jax.lax.scan(
+            block, x, (params["blocks"], cache["mlstm"], cache["slstm"]))
+        x = norm_fn("rmsnorm")(x, params["norm_f"])
+        logits = jnp.dot(x, params["lm_head"].astype(self.dtype))[:, 0]
+        return logits, {"mlstm": m2, "slstm": s2}

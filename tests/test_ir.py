@@ -1,0 +1,116 @@
+"""ISAMIR construction + interpreter oracle tests."""
+import numpy as np
+import pytest
+
+from repro.core import kernels_ir as K
+from repro.core.ir import (Access, Axis, Buffer, IRError, Program,
+                           ProgramBuilder, Statement, interpret, random_inputs)
+
+
+def test_matmul_semantics():
+    prog = K.matmul(5, 4, 3)
+    rng = np.random.default_rng(0)
+    ins = random_inputs(prog, rng)
+    out = interpret(prog, ins)["C"]
+    np.testing.assert_allclose(out, ins["C"] + ins["A"] @ ins["B"], rtol=1e-5)
+
+
+def test_conv1d_semantics():
+    prog = K.conv1d(2, 6, 3, 4, 5)
+    rng = np.random.default_rng(1)
+    ins = random_inputs(prog, rng)
+    out = interpret(prog, ins)["C"]
+    ref = np.array(ins["C"])
+    for d in range(3):
+        ref += np.einsum("ixk,ko->ixo", ins["A"][:, d:d + 6, :], ins["B"][d])
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_conv2d_strided_semantics():
+    prog = K.conv2d(1, 3, 3, 2, 2, 2, 3, stride=2)
+    rng = np.random.default_rng(2)
+    ins = random_inputs(prog, rng)
+    out = interpret(prog, ins)["C"]
+    ref = np.array(ins["C"])
+    for y in range(3):
+        for x in range(3):
+            patch = ins["A"][:, 2 * y:2 * y + 2, 2 * x:2 * x + 2, :]
+            ref[:, y, x, :] += np.einsum("byxc,yxco->bo", patch, ins["W"])
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_separable_depthwise_semantics():
+    prog = K.separable_depthwise_conv(1, 3, 3, 2, 2, 3, 2, 4)
+    rng = np.random.default_rng(3)
+    ins = random_inputs(prog, rng)
+    out = interpret(prog, ins)["C"]
+    A, D, P, C0 = ins["A"], ins["D"], ins["P"], ins["C"]
+    ref = np.array(C0)
+    for i in range(3):
+        for j in range(3):
+            # depthwise (q, r) intermediate, then pointwise P[2q+r, k]
+            acc = np.zeros((3, 2))
+            for di in range(2):
+                for dj in range(2):
+                    acc += A[0, i + di, j + dj][:, None] * D[di, dj]
+            ref[0, i, j] += acc.reshape(-1) @ P
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_gru_cell_semantics():
+    prog = K.gru_cell(3, 5, 4)
+    rng = np.random.default_rng(4)
+    ins = random_inputs(prog, rng)
+    out = interpret(prog, ins)["Hout"]
+
+    def sig(v):
+        return 1 / (1 + np.exp(-v))
+
+    x, h = ins["X"], ins["H"]
+    r = sig(x @ ins["Wr"] + h @ ins["Ur"] + ins["br"])
+    z = sig(x @ ins["Wz"] + h @ ins["Uz"] + ins["bz"])
+    n = np.tanh(x @ ins["Wn"] + r * (h @ ins["Un"] + ins["bnh"]) + ins["bnx"])
+    ref = (1 - z) * n + z * h
+    np.testing.assert_allclose(out, ref, rtol=1e-5)
+
+
+def test_statement_domain_excludes_unused_axes():
+    """A += over axes unused by the statement must not double-count."""
+    pb = ProgramBuilder("p")
+    i, j = pb.axes(i=3, j=4)
+    x = pb.buffer("x", (3,))
+    y = pb.buffer("y", (3,))
+    pb.stmt(y[i], "+=", x[i])    # j unused: must run over i only
+    prog = pb.build()
+    ins = {"x": np.ones(3)}
+    out = interpret(prog, ins)["y"]
+    np.testing.assert_allclose(out, np.ones(3))
+
+
+def test_validation_errors():
+    pb = ProgramBuilder("bad")
+    i = pb.axis("i", 4)
+    x = pb.buffer("x", (4,))
+    with pytest.raises(IRError):
+        Program("p", (Axis("i", 4),), (Buffer("x", (4,)),),
+                (Statement(":=", Access("x", ((1,),)), Access("nope", ((1,),))),))
+    with pytest.raises(IRError):
+        Statement("bogus", Access("x", ((1,),)), Access("x", ((1,),)))
+
+
+def test_symbolic_axis_cannot_interpret():
+    from repro.core.instructions import mxu_matmul
+    with pytest.raises(IRError):
+        interpret(mxu_matmul(), {})
+
+
+def test_pretty_print_roundtrip_info():
+    prog = K.matmul(2, 2, 2)
+    s = prog.pretty()
+    assert "tmp[i][j][k] := A[i][k];" in s
+    assert "C[i][j] += tmp[i][j][k];" in s
+
+
+def test_signature_distinguishes_programs():
+    assert K.matmul(2, 2, 2).signature() != K.matmul(2, 2, 3).signature()
+    assert K.matmul(2, 2, 2).signature() == K.matmul(2, 2, 2).signature()

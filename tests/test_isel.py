@@ -1,0 +1,56 @@
+"""Instruction-selection tests (paper Section 2.4)."""
+import pytest
+
+from repro.core import instructions as I
+from repro.core import kernels_ir as K
+from repro.core.isel import select_instructions
+
+
+def test_fused_beats_unfused_on_gru_gates():
+    """The r/z gate chains must select the fused matmul+bias+sigmoid needle
+    (1 call) over three separate instructions."""
+    sel = select_instructions(K.gru_cell(4, 8, 6), I.tpu_isa())
+    names = [si.needle.name for si in sel.instrs]
+    assert names.count("fused.matmul_bias_sigmoid") == 2
+    assert names.count("fused.matmul_bias") == 1   # the n-gate H-side
+
+def test_no_fused_isa_still_complete():
+    sel = select_instructions(K.gru_cell(4, 8, 6),
+                              I.tpu_isa(include_fused=False))
+    assert sel.complete
+    assert all(not si.needle.name.startswith("fused.")
+               for si in sel.instrs)
+
+
+def test_transform_path_chosen_when_cheaper():
+    """Separable-depthwise: the factorized 2-matmul cover must win over the
+    complete-but-huge elementwise cover."""
+    sel = select_instructions(
+        K.separable_depthwise_conv(1, 4, 4, 3, 3, 4, 2, 8), I.tpu_isa())
+    assert sel.complete
+    assert sel.steps and "factor" in sel.steps[0].name
+    assert [si.needle.name for si in sel.instrs] == ["mxu.matmul",
+                                                     "mxu.matmul"]
+
+
+def test_selection_orders_by_program_position():
+    sel = select_instructions(K.mlp_gate(8, 16, 32), I.tpu_isa())
+    firsts = [si.first_stmt for si in sel.instrs]
+    assert firsts == sorted(firsts)
+
+
+def test_statement_cover_is_partition():
+    sel = select_instructions(K.gru_cell(2, 4, 4), I.tpu_isa())
+    covered = []
+    for si in sel.instrs:
+        covered.extend(si.mapping.stmt_map)
+    assert sorted(covered) == list(range(len(sel.program.statements)))
+
+
+def test_allow_transforms_false_reports_uncovered():
+    from repro.core.instructions import mxu_matmul
+    sel = select_instructions(
+        K.separable_depthwise_conv(1, 4, 4, 3, 3, 4, 2, 8),
+        [mxu_matmul()], allow_transforms=False)
+    assert not sel.complete
+    assert sel.uncovered

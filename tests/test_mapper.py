@@ -1,0 +1,112 @@
+"""Deterministic mapper tests — the paper's Section 6.1 mapping claims."""
+import numpy as np
+import pytest
+
+from repro.core import instructions as I
+from repro.core import kernels_ir as K
+from repro.core.mapper import map_program
+
+
+def test_matmul_identity_mapping():
+    h = K.matmul(64, 32, 16)
+    r = map_program(h, I.mxu_matmul())
+    assert r.ok
+    m = r.best(h)
+    assert dict(m.axis_map) == {"i": "i", "j": "j", "k": "k"}
+    assert m.outer_axes == ()
+    assert m.calls(h) == 1
+
+
+def test_conv1d_maps_to_matmul_with_choices():
+    """Paper Listing 5 -> Listing 6, including the multiple k-axis choices."""
+    h = K.conv1d(2, 6, 3, 8, 4)
+    r = map_program(h, I.mxu_matmul())
+    assert r.ok
+    kmaps = {dict(m.axis_map)["k"] for m in r.mappings}
+    assert "ki" in kmaps           # the canonical contraction
+    assert len(kmaps) >= 2         # "there were multiple choices for the k axis"
+    best = r.best(h)
+    assert dict(best.axis_map)["j"] == "ko"
+
+
+def test_conv2d_maps_to_matmul():
+    h = K.conv2d(1, 4, 4, 3, 3, 4, 8)
+    r = map_program(h, I.mxu_matmul())
+    assert r.ok
+    assert dict(r.best(h).axis_map)["k"] == "ci"
+
+
+def test_depthwise_maps_to_dot_not_matmul():
+    """Depthwise conv mixes no channels: a matmul window must not exist, but
+    the dot-product instruction covers it."""
+    h = K.depthwise_conv2d(1, 4, 4, 3, 3, 8)
+    assert not map_program(h, I.mxu_matmul()).ok
+    assert map_program(h, I.vpu_dot()).ok
+
+
+def test_separable_depthwise_fails_directly_with_feedback():
+    h = K.separable_depthwise_conv(1, 4, 4, 3, 3, 4, 2, 8)
+    r = map_program(h, I.mxu_matmul())
+    assert not r.ok
+    kinds = {f.kind for f in r.failures}
+    assert kinds & {"not_extractable", "op_mismatch"}
+
+
+def test_gru_yields_six_gemms():
+    h = K.gru_cell(4, 8, 6)
+    r = map_program(h, I.mxu_matmul(), max_results=64)
+    windows = {m.stmt_map for m in r.mappings}
+    assert len(windows) == 6
+
+
+def test_gru_fused_windows():
+    h = K.gru_cell(4, 8, 6)
+    r = map_program(h, I.fused_matmul_bias("sigmoid"), max_results=64)
+    windows = {m.stmt_map for m in r.mappings}
+    assert len(windows) == 2      # the r and z gate chains
+
+
+def test_attention_scores_map():
+    h = K.attention_scores(2, 3, 4, 5, 8)
+    r = map_program(h, I.mxu_matmul())
+    assert r.ok
+    m = r.best(h)
+    assert set(m.outer_axes) == {"b", "h"}
+    assert m.calls(h) == 6
+
+
+def test_fixed_size_needle_extent_check():
+    h = K.matmul(64, 64, 64)
+    r = map_program(h, I.mxu_matmul128())
+    assert not r.ok
+    assert any(f.kind == "extent_mismatch" for f in r.failures)
+    h2 = K.matmul(128, 128, 128)
+    assert map_program(h2, I.mxu_matmul128()).ok
+
+
+def test_temp_escape_rejected():
+    """A needle temp may not bind a haystack buffer used outside the window."""
+    from repro.core.ir import ProgramBuilder
+    pb = ProgramBuilder("escape")
+    i, j, k = pb.axes(i=4, j=4, k=4)
+    A = pb.buffer("A", (4, 4))
+    B = pb.buffer("B", (4, 4))
+    C = pb.buffer("C", (4, 4))
+    D = pb.buffer("D", (4, 4, 4))   # NOT a temp: escapes as an output
+    pb.stmt(D[i, j, k], ":=", A[i, k])
+    pb.stmt(D[i, j, k], "*=", B[k, j])
+    pb.stmt(C[i, j], "+=", D[i, j, k])
+    pb.output("C", "D")
+    h = pb.build()
+    r = map_program(h, I.mxu_matmul())
+    assert not r.ok
+    assert any(f.kind == "temp_escapes" for f in r.failures)
+
+
+def test_mapping_calls_counts_window_domain_only():
+    h = K.conv1d(2, 6, 3, 8, 4)
+    best = map_program(h, I.mxu_matmul()).best(h)
+    # best contraction: k->ki, outer (i or x choice, d): calls = extents product
+    calls = best.calls(h)
+    assert calls in (6, 12, 18, 48)
+    assert calls == 6  # i->x (width), j->ko, k->ki leaves outer {i, d} = 2*3

@@ -1,0 +1,148 @@
+"""IR transformation + non-deterministic search tests, incl. hypothesis
+property tests that transforms preserve semantics against the NumPy oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import instructions as I
+from repro.core import kernels_ir as K
+from repro.core.ir import interpret, random_inputs
+from repro.core.transforms import (FactorReduction, InsertUnitDim, SplitAxis,
+                                   find_reduction_chains, search_mappings)
+
+
+def test_find_reduction_chains():
+    h = K.separable_depthwise_conv(1, 3, 3, 2, 2, 3, 2, 4)
+    chains = find_reduction_chains(h, min_muls=2)
+    assert len(chains) == 1
+    assert len(chains[0].muls) == 2
+
+
+def test_factor_reduction_semantics():
+    h = K.separable_depthwise_conv(1, 4, 4, 3, 3, 4, 2, 8)
+    ch = find_reduction_chains(h, min_muls=2)[0]
+    t = FactorReduction(ch, factor_mul=1)
+    h2 = t.apply(h)
+    rng = np.random.default_rng(0)
+    ins = random_inputs(h, rng)
+    ref = interpret(h, ins)["C"]
+    got = interpret(h2, t.adapt_inputs(ins))["C"]
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+def test_search_unblocks_separable_depthwise():
+    """Paper Section 2.3's flagship case: factorization exposes the matmul."""
+    h = K.separable_depthwise_conv(1, 4, 4, 3, 3, 4, 2, 8)
+    results = search_mappings(h, I.mxu_matmul(), max_depth=2)
+    assert results
+    assert any(len(r.steps) == 1 and "factor" in r.steps[0].name
+               for r in results)
+
+
+def test_split_axis_semantics():
+    h = K.matmul(8, 6, 4)
+    t = SplitAxis("i", 4)
+    h2 = t.apply(h)
+    assert {a.name for a in h2.axes} == {"i_o", "i_i", "j", "k"}
+    rng = np.random.default_rng(1)
+    ins = random_inputs(h, rng)
+    np.testing.assert_allclose(interpret(h2, ins)["C"],
+                               interpret(h, ins)["C"], rtol=1e-6)
+
+
+def test_split_axis_enables_fixed_needle():
+    from repro.core.mapper import map_program
+    h = K.matmul(256, 128, 128)
+    assert not map_program(h, I.mxu_matmul128()).ok
+    h2 = SplitAxis("i", 128).apply(h)
+    r = map_program(h2, I.mxu_matmul128())
+    assert r.ok
+    assert "i_o" in r.best(h2).outer_axes
+
+
+def test_insert_unit_dim_semantics():
+    h = K.matmul(4, 3, 5)
+    t = InsertUnitDim("A")
+    h2 = t.apply(h)
+    assert h2.buffer("A").shape == (4, 5, 1)
+    rng = np.random.default_rng(2)
+    ins = random_inputs(h, rng)
+    got = interpret(h2, t.adapt_inputs(ins))
+    np.testing.assert_allclose(t.adapt_outputs(got)["C"],
+                               interpret(h, ins)["C"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: every applicable transform preserves program semantics.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def chain_programs(draw):
+    """Random 'C += A * B1 [* B2] ...' reduction programs with random axis
+    assignments — the domain FactorReduction must be sound over."""
+    from repro.core.ir import ProgramBuilder
+    n_axes = draw(st.integers(3, 5))
+    sizes = [draw(st.integers(2, 4)) for _ in range(n_axes)]
+    pb = ProgramBuilder("rand")
+    axes = [pb.axis(f"a{i}", s) for i, s in enumerate(sizes)]
+    n_muls = draw(st.integers(2, 3))
+
+    def rand_subset(min_len=1):
+        idx = draw(st.lists(st.integers(0, n_axes - 1), min_size=min_len,
+                            max_size=n_axes, unique=True))
+        return sorted(idx)
+
+    buf_axes = [rand_subset() for _ in range(n_muls + 2)]  # A, B*, C
+    all_used = sorted(set().union(*buf_axes[:-1]))
+    # C gets a subset of used axes so there is a reduction
+    c_axes = [a for a in buf_axes[-1] if a in all_used] or [all_used[0]]
+    names = []
+    for bi, idxs in enumerate(buf_axes[:-1]):
+        nm = f"B{bi}"
+        pb.buffer(nm, tuple(sizes[i] for i in idxs))
+        names.append((nm, idxs))
+    pb.buffer("C", tuple(sizes[i] for i in c_axes))
+    t_idxs = all_used
+    pb.temp("t", tuple(sizes[i] for i in t_idxs))
+
+    def acc(nm, idxs):
+        from repro.core.ir import AccessExpr, AxisExpr
+        return AccessExpr(nm, tuple(AxisExpr({f"a{i}": 1}, 0) for i in idxs))
+
+    pb.stmt(acc("t", t_idxs), ":=", acc("B0", names[0][1]))
+    for nm, idxs in names[1:]:
+        pb.stmt(acc("t", t_idxs), "*=", acc(nm, idxs))
+    pb.stmt(acc("C", c_axes), "+=", acc("t", t_idxs))
+    pb.output("C")
+    return pb.build()
+
+
+@settings(max_examples=30, deadline=None)
+@given(chain_programs(), st.integers(0, 2), st.randoms())
+def test_factor_reduction_property(prog, factor_idx, rnd):
+    from repro.core.ir import IRError
+    chains = find_reduction_chains(prog, min_muls=2)
+    if not chains:
+        return
+    ch = chains[0]
+    f = factor_idx % len(ch.muls)
+    try:
+        prog2 = FactorReduction(ch, f).apply(prog)
+    except IRError:
+        return  # R1 empty: legitimately inapplicable
+    rng = np.random.default_rng(rnd.randint(0, 2**31))
+    ins = random_inputs(prog, rng)
+    np.testing.assert_allclose(interpret(prog2, ins)["C"],
+                               interpret(prog, ins)["C"], rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 6), st.integers(2, 6),
+       st.sampled_from(["i", "j", "k"]), st.integers(2, 3))
+def test_split_axis_property(m, n, k, axis, factor):
+    prog = K.matmul(m * factor, n * factor, k * factor)
+    prog2 = SplitAxis(axis, factor).apply(prog)
+    rng = np.random.default_rng(0)
+    ins = random_inputs(prog, rng)
+    np.testing.assert_allclose(interpret(prog2, ins)["C"],
+                               interpret(prog, ins)["C"], rtol=1e-5)
