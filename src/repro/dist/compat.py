@@ -1,0 +1,86 @@
+"""Compatibility helpers for jax API drift in the mesh/sharding surface.
+
+The placement layer targets two generations of the jax sharding API:
+
+* jax >= 0.5: ``AbstractMesh(axis_sizes, axis_names)`` and
+  ``jax.sharding.AxisType`` exist; ``jax.make_mesh`` accepts ``axis_types``.
+* jax 0.4.3x: ``AbstractMesh`` takes a single ``((name, size), ...)`` tuple
+  and there is no public ``AxisType``.
+
+Everything in ``repro.dist.sharding`` only reads ``mesh.axis_names`` and
+``mesh.shape`` (a name->size mapping), which both generations provide, so
+the rules themselves are version-agnostic.  These helpers normalise the
+construction side.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def abstract_mesh(axis_sizes: tuple[int, ...], axis_names: tuple[str, ...]):
+    """Construct a ``jax.sharding.AbstractMesh`` on either jax generation."""
+    from jax.sharding import AbstractMesh  # may raise ImportError on old jax
+    try:
+        return AbstractMesh(axis_sizes, axis_names)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+
+
+def supports_new_abstract_mesh() -> bool:
+    """True if ``AbstractMesh(axis_sizes, axis_names)`` works as spelled."""
+    try:
+        from jax.sharding import AbstractMesh
+        AbstractMesh((1,), ("_probe",))
+        return True
+    except (ImportError, TypeError):
+        return False
+
+
+def install_abstract_mesh_compat() -> bool:
+    """Patch ``jax.sharding.AbstractMesh`` so the modern
+    ``AbstractMesh(axis_sizes, axis_names)`` spelling works on old jax.
+
+    Returns True if the modern spelling works after the call.  Only the
+    public alias is rebound — jax internals keep using
+    ``jax._src.mesh.AbstractMesh``, and the factory returns genuine
+    instances of it, so ``NamedSharding`` etc. accept the result.
+    """
+    import jax.sharding as jsh
+    if supports_new_abstract_mesh():
+        return True
+    try:
+        legacy = jsh.AbstractMesh
+    except AttributeError:
+        return False
+
+    class _AbstractMeshCompat(legacy):
+        """Legacy AbstractMesh accepting the modern (sizes, names) spelling.
+
+        A subclass (not a factory function) so the public alias stays a
+        type: ``isinstance(x, jax.sharding.AbstractMesh)`` keeps working.
+        """
+
+        def __init__(self, axis_sizes, axis_names=None, axis_types=None):
+            if axis_names is None:      # legacy caller: pass through
+                shape_tuple = axis_sizes
+            else:
+                shape_tuple = tuple(zip(axis_names, axis_sizes))
+            if axis_types is None:
+                legacy.__init__(self, shape_tuple)
+            else:
+                legacy.__init__(self, shape_tuple, axis_types)
+
+    jsh.AbstractMesh = _AbstractMeshCompat
+    return True
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    try:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    except TypeError:
+        return jax.make_mesh(shape, axes)

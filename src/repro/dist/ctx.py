@@ -1,0 +1,59 @@
+"""Context-scoped activation sharding.
+
+``constrain(x, name)`` is the only placement hook the models use.  Inside
+an ``activation_sharding_ctx(rules)`` block it applies
+``jax.lax.with_sharding_constraint`` with whatever sharding the active
+rules assign to ``name``; outside any context — unit tests, single-device
+scripts, kernels reused standalone — it is a transparent no-op, so model
+code never imports a mesh.
+
+The active rules live in a ``contextvars.ContextVar``: tracing under
+``jax.jit`` happens on the caller's thread inside the ``with`` block, and
+context-vars propagate correctly across the async dispatch helpers jax
+uses internally (unlike a bare module global with threads).
+"""
+from __future__ import annotations
+
+import contextlib
+from contextvars import ContextVar
+from typing import Callable, Optional
+
+import jax
+
+_RULES: ContextVar[Optional[Callable]] = ContextVar(
+    "activation_sharding_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding_ctx(rules: Callable):
+    """Activate ``rules(name, shape) -> sharding | None`` for the block.
+
+    Nestable: an inner context shadows the outer one and the outer rules
+    are restored on exit.
+    """
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules() -> Optional[Callable]:
+    """The active rule set, or None when no context is entered."""
+    return _RULES.get()
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Constrain ``x`` to the active sharding for ``name``.
+
+    Identity when no ``activation_sharding_ctx`` is active or when the
+    active rules have no opinion about ``name`` (they return None) — so an
+    unknown rule name is never an error, just an unconstrained tensor.
+    """
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    sharding = rules(name, tuple(x.shape))
+    if sharding is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sharding)

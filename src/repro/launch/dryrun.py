@@ -209,6 +209,8 @@ def main():
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
+    if not args.all and not (args.arch and args.shape):
+        ap.error("either --all or both --arch and --shape are required")
 
     cells = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
              else [(args.arch, args.shape)])

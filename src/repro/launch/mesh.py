@@ -9,26 +9,26 @@ from __future__ import annotations
 
 import jax
 
+from ..dist import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi-pod adds the 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     """Arbitrary mesh for tests / elastic re-meshing."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Whatever devices exist locally (smoke tests: 1 CPU device)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if model < 1 or n % model:
+        raise ValueError(
+            f"model axis {model} does not divide the {n} available "
+            f"device(s); pass --model-axis dividing the device count")
+    return compat.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,101 @@
+"""Minimal stand-in for ``hypothesis`` used only when the real library is
+not installed (see conftest.py).  It implements exactly the surface this
+repo's property tests use — ``given``, ``settings`` and the strategies
+``integers``, ``lists``, ``sampled_from``, ``randoms``, ``composite`` — as
+deterministic random search seeded per test, with no shrinking and no
+example database.  Install the real ``hypothesis`` (declared in
+pyproject.toml) for full property testing; new tests must not rely on
+anything beyond this subset when targeting the fallback.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def _lists(elements, min_size=0, max_size=None, unique=False):
+    def draw(rng):
+        hi = max_size if max_size is not None else min_size + 8
+        n = rng.randint(min_size, hi)
+        out = []
+        attempts = 0
+        while len(out) < n and attempts < 100 * (n + 1):
+            v = elements.example(rng)
+            attempts += 1
+            if unique and v in out:
+                continue
+            out.append(v)
+        return out
+    return _Strategy(draw)
+
+
+def _randoms():
+    return _Strategy(lambda rng: random.Random(rng.getrandbits(64)))
+
+
+def _composite(fn):
+    @functools.wraps(fn)
+    def build(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strat: strat.example(rng), *args, **kwargs)
+        return _Strategy(draw_value)
+    return build
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.lists = _lists
+strategies.randoms = _randoms
+strategies.composite = _composite
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' public name
+    def __init__(self, max_examples=20, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._fallback_settings = self
+        return fn
+
+
+def given(*strats, **kw_strats):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) \
+                or getattr(fn, "_fallback_settings", None)
+            n = cfg.max_examples if cfg else 20
+            # deterministic per-test seed: reproducible failures
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = [s.example(rng) for s in strats]
+                drawn_kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *drawn, **kwargs, **drawn_kw)
+        # hide the drawn parameters from pytest's fixture resolution, as
+        # real hypothesis does: the wrapper itself takes no arguments
+        wrapper.__dict__.pop("__wrapped__", None)
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorator

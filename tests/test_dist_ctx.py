@@ -1,0 +1,109 @@
+"""Contract tests for repro.dist.ctx: constrain is an identity outside
+``activation_sharding_ctx``, applies the matching rule inside it, and
+unknown rule names fall back to no-op."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.ctx import activation_sharding_ctx, constrain, current_rules
+from repro.dist.sharding import make_activation_rules
+from repro.launch.mesh import make_mesh
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_constrain_is_identity_outside_ctx():
+    x = jnp.arange(8.0).reshape(2, 4)
+    assert current_rules() is None
+    y = constrain(x, "residual")
+    assert y is x                      # literally untouched, not a copy
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_constrain_applies_matching_rule_inside_ctx(mesh):
+    cfg = get_config("qwen2-7b")
+    rules = make_activation_rules(mesh, cfg)
+    x = jnp.ones((2, 8, 4, 2))
+
+    applied = []
+    def spy(name, shape):
+        s = rules(name, shape)
+        applied.append((name, None if s is None else s.spec))
+        return s
+
+    with activation_sharding_ctx(spy):
+        assert current_rules() is spy
+        y = constrain(x, "heads")
+    assert applied == [("heads", P("data", None, "model", None))]
+    assert y.shape == x.shape
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+def test_constrain_under_jit_traces_and_preserves_values(mesh):
+    cfg = get_config("qwen2-7b")
+    rules = make_activation_rules(mesh, cfg)
+    x = jnp.arange(24.0).reshape(2, 3, 4)
+
+    @jax.jit
+    def f(a):
+        return constrain(a, "residual") * 2.0
+
+    with mesh, activation_sharding_ctx(rules):
+        out = f(x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2.0)
+
+
+def test_unknown_rule_name_is_noop(mesh):
+    cfg = get_config("qwen2-7b")
+    rules = make_activation_rules(mesh, cfg)
+    x = jnp.ones((4, 4))
+    with activation_sharding_ctx(rules):
+        y = constrain(x, "no_such_rule_name")
+    assert y is x
+
+
+def test_rules_returning_none_is_noop():
+    x = jnp.ones((4, 4))
+    with activation_sharding_ctx(lambda name, shape: None):
+        assert constrain(x, "residual") is x
+
+
+def test_ctx_restores_on_exit_and_nests(mesh):
+    cfg = get_config("qwen2-7b")
+    outer = make_activation_rules(mesh, cfg)
+    inner = lambda name, shape: None   # noqa: E731
+    with activation_sharding_ctx(outer):
+        with activation_sharding_ctx(inner):
+            assert current_rules() is inner
+        assert current_rules() is outer
+    assert current_rules() is None
+
+
+def test_ctx_restores_after_exception(mesh):
+    cfg = get_config("qwen2-7b")
+    rules = make_activation_rules(mesh, cfg)
+    with pytest.raises(ValueError):
+        with activation_sharding_ctx(rules):
+            raise ValueError("boom")
+    assert current_rules() is None
+
+
+def test_explicit_sharding_rules_apply(mesh):
+    """constrain accepts whatever sharding object the rules hand back."""
+    sh = NamedSharding(mesh, P("data", None))
+    x = jnp.ones((2, 4))
+
+    @jax.jit
+    def f(a):
+        return constrain(a, "anything")
+
+    with activation_sharding_ctx(lambda name, shape: sh):
+        y = f(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    assert y.sharding.is_equivalent_to(sh, x.ndim)
