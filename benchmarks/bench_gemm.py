@@ -27,17 +27,10 @@ from repro.core.scheduler import schedule
 from repro.core.sysgraph import V5E_HBM_BW, V5E_PEAK_FLOPS, tpu_v5e
 
 # (m, n, k) from DeepBench train/inference GEMM lists — a library-friendly
-# head and an awkward tail (odd m / tiny n — RNN + attention shapes).
-SIZES = [
-    (1024, 128, 1024),
-    (2048, 64, 2048),
-    (1760, 128, 1760),
-    (2560, 64, 2560),
-    (5124, 700, 2048),
-    (3072, 128, 1024),
-    (35, 700, 2048),
-    (7680, 1, 2560),
-]
+# head and an awkward tail (odd m / tiny n — RNN + attention shapes).  The
+# canonical list lives with the autotuner so the tuned/gemm suites and the
+# tune CLI always cover the same shapes.
+from repro.search.tune import DEEPBENCH_GEMM_SIZES as SIZES
 
 # The library's intended focus: large 512-aligned GEMMs (its hand-tuned
 # blocking).  Odd / skinny shapes pay the full padding cost — the paper's

@@ -1,0 +1,54 @@
+"""Tuned-vs-greedy suite: what the repro.search autotuner buys on the
+DeepBench GEMM shapes (paper Section 4's search framework applied to the
+Figure 3 workload).
+
+For each shape the suite reports the GreedyApproach modeled makespan against
+the tuned one.  Tuned configs come from the persistent tuning cache when a
+matching record exists (``src=cache`` — run ``python -m repro.search.tune
+--suite gemm`` first); on a miss a small in-process hill-climb runs instead
+(``src=search``) without touching the cache, so the benchmark is read-only.
+
+CSV: name, us_per_call = tuned modeled time (us), derived =
+"greedy=<s>/tuned=<s>/speedup=<greedy/tuned>/src=<cache|search>".
+"""
+from __future__ import annotations
+
+from repro.core import instructions as I
+from repro.core import kernels_ir as K
+from repro.core.isel import select_instructions
+from repro.core.sysgraph import tpu_v5e
+from repro.search.cache import get_default_cache
+from repro.search.evaluate import CostModelEvaluator
+from repro.search.space import SearchSpace, tuning_key
+from repro.search.strategies import hill_climb
+from repro.search.tune import DEEPBENCH_GEMM_SIZES
+
+SEARCH_TRIALS = 12
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    graph = tpu_v5e(1)
+    space = SearchSpace.for_graph(graph)
+    cache = get_default_cache()
+    for m, n, k in DEEPBENCH_GEMM_SIZES:
+        prog = K.matmul(m, n, k)
+        sel = select_instructions(prog, [I.mxu_matmul()],
+                                  allow_transforms=False)
+        evaluate = CostModelEvaluator(sel, graph)
+        greedy = evaluate(space.baseline())
+
+        rec = cache.lookup(tuning_key(prog, graph, "cost"))
+        if rec is not None and rec.config:
+            tuned = evaluate(rec.config)
+            src = "cache"
+        else:
+            outcome = hill_climb(space, evaluate, trials=SEARCH_TRIALS,
+                                 seed=0)
+            tuned = outcome.best_cost
+            src = "search"
+        tuned = min(tuned, greedy)   # a stale cache entry never regresses
+        rows.append((f"tuned_gemm_{m}x{n}x{k}", tuned * 1e6,
+                     f"greedy={greedy:.3e}s/tuned={tuned:.3e}s/"
+                     f"speedup={greedy / tuned:.2f}/src={src}"))
+    return rows

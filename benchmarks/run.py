@@ -1,8 +1,10 @@
 """Benchmark harness — one suite per paper table/figure (+ the roofline).
 
-    PYTHONPATH=src python -m benchmarks.run [--only <suite>]
+    PYTHONPATH=src python -m benchmarks.run [--only <suite>] [--json <path>]
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
+rows (plus per-suite errors) as machine-readable JSON so the perf trajectory
+is comparable across PRs (e.g. ``BENCH_mapper.json``).
 Suites:
     mapper    — paper Section 6.1 (mapping coverage)
     gemm      — paper Figure 3 (DeepBench GEMM, ISAM vs kernel library)
@@ -10,10 +12,12 @@ Suites:
     resnet    — paper Figure 5 (ResNet-50 layers via conv->matmul mapping)
     kernels   — Pallas kernel microbenchmarks vs jnp oracles
     roofline  — dry-run roofline terms per (arch x shape x mesh)
+    tuned     — repro.search autotuner vs GreedyApproach (DeepBench GEMMs)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -21,10 +25,13 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write results as JSON (machine-readable "
+                         "perf trajectory)")
     args = ap.parse_args()
 
     from . import (bench_gemm, bench_gru, bench_kernels, bench_mapper,
-                   bench_resnet, bench_roofline)
+                   bench_resnet, bench_roofline, bench_tuned)
     suites = {
         "mapper": bench_mapper.run,
         "gemm": bench_gemm.run,
@@ -32,20 +39,35 @@ def main() -> None:
         "resnet": bench_resnet.run,
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
+        "tuned": bench_tuned.run,
     }
     if args.only:
+        if args.only not in suites:
+            print(f"unknown suite {args.only!r}; available: "
+                  f"{', '.join(sorted(suites))}", file=sys.stderr)
+            raise SystemExit(2)
         suites = {args.only: suites[args.only]}
 
     print("name,us_per_call,derived")
+    records: list[dict] = []
     failures = 0
     for name, fn in suites.items():
         try:
             for row_name, us, derived in fn():
                 print(f"{row_name},{us:.2f},{derived}", flush=True)
+                records.append({"suite": name, "name": row_name,
+                                "us_per_call": us, "derived": derived})
         except Exception as e:
             failures += 1
             print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            records.append({"suite": name, "name": name, "us_per_call": -1.0,
+                            "error": f"{type(e).__name__}: {e}"})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "failures": failures, "rows": records},
+                      f, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

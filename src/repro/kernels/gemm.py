@@ -39,22 +39,46 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def tuned_block(m: int, n: int, k: int,
+                default: tuple[int, int, int] = (128, 128, 128)
+                ) -> tuple[int, int, int]:
+    """Block shape for an (m, n, k) GEMM from the persistent tuning cache
+    (``repro.search``), falling back to ``default`` on a cache miss.
+
+    Tune once (``python -m repro.search.tune --suite gemm``) and every later
+    process picks the winning BlockSpec up here — keyed by program
+    fingerprint, system graph, backend, and jax version.
+    """
+    try:
+        from ..search.cache import clamp_tile, lookup_gemm
+        rec = lookup_gemm(m, n, k)
+    except Exception:
+        rec = None
+    if rec is not None and rec.tile:
+        return clamp_tile(rec.tile, m, n, k)
+    return default
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def gemm(a: jax.Array, b: jax.Array,
-         block: tuple[int, int, int] = (128, 128, 128),
+         block: tuple[int, int, int] | None = None,
          interpret: bool | None = None) -> jax.Array:
     """C = A @ B with explicit VMEM tiling.
 
     ``block=(bm, bn, bk)`` is the VMEM tile shape — normally chosen by the
-    ISAM scheduler (see ops.scheduled_gemm).  Inputs whose dimensions don't
-    divide the block are padded up and the result cropped; zero padding is
-    exact for the contraction.
+    ISAM scheduler (see ops.scheduled_gemm).  ``block=None`` consults the
+    persistent tuning cache (``tuned_block``; resolved at trace time, so a
+    cache update needs a fresh process or jit cache).  Inputs whose
+    dimensions don't divide the block are padded up and the result cropped;
+    zero padding is exact for the contraction.
     """
     if interpret is None:
         interpret = default_interpret()
     m, k = a.shape
     k2, n = b.shape
     assert k == k2, (a.shape, b.shape)
+    if block is None:
+        block = tuned_block(m, n, k)
     bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
 
     acc_dtype = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float32) else a.dtype
@@ -80,14 +104,17 @@ def gemm(a: jax.Array, b: jax.Array,
 @functools.partial(jax.jit, static_argnames=("block", "interpret", "fn"))
 def gemm_bias_act(a: jax.Array, b: jax.Array, bias: jax.Array,
                   fn: str = "",
-                  block: tuple[int, int, int] = (128, 128, 128),
+                  block: tuple[int, int, int] | None = None,
                   interpret: bool | None = None) -> jax.Array:
     """The paper's fused instruction: act(A @ B + bias) in one kernel —
-    the epilogue runs on the VPU while the block is still VMEM-resident."""
+    the epilogue runs on the VPU while the block is still VMEM-resident.
+    ``block=None`` consults the tuning cache, as in ``gemm``."""
     if interpret is None:
         interpret = default_interpret()
     m, k = a.shape
     _, n = b.shape
+    if block is None:
+        block = tuned_block(m, n, k)
     bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
     mp, np_, kp = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn, _cdiv(k, bk) * bk
     a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a

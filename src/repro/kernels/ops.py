@@ -19,15 +19,34 @@ from ..core.scheduler import Schedule, schedule
 from ..core.sysgraph import SystemGraph, tpu_v5e
 from . import gemm as gemm_kernel
 from . import gru as gru_kernel
-from .gemm import gemm, gemm_bias_act
+from .gemm import gemm, gemm_bias_act, tuned_block
 from .gru import gru_cell, gru_seq
 
 
-@functools.lru_cache(maxsize=256)
-def plan_gemm(m: int, n: int, k: int,
-              approach: str = "greedy") -> tuple[tuple[int, int, int], float]:
+def plan_gemm(m: int, n: int, k: int, approach: str = "greedy",
+              use_cache: bool = True) -> tuple[tuple[int, int, int], float]:
     """Run the ISAM pipeline on an (m, n, k) GEMM against the v5e graph;
-    return (chosen tile (bm, bn, bk), modeled seconds)."""
+    return (chosen tile (bm, bn, bk), modeled seconds).
+
+    With ``use_cache`` (default), a winning config from the persistent
+    tuning cache (``repro.search``) short-circuits planning entirely — the
+    tuned tile and its modeled cost are returned as recorded.  The lookup
+    happens on every call (only the pure planning below is memoized), so
+    activating a cache mid-process takes effect immediately."""
+    if use_cache:
+        try:
+            from ..search.cache import clamp_tile, lookup_gemm
+            rec = lookup_gemm(m, n, k)
+        except Exception:
+            rec = None
+        if rec is not None and rec.tile:
+            return clamp_tile(rec.tile, m, n, k), rec.cost
+    return _plan_gemm_uncached(m, n, k, approach)
+
+
+@functools.lru_cache(maxsize=256)
+def _plan_gemm_uncached(m: int, n: int, k: int,
+                        approach: str) -> tuple[tuple[int, int, int], float]:
     prog = K.matmul(m, n, k)
     sel = select_instructions(prog, [I.mxu_matmul()], allow_transforms=False)
     app: Approach = GreedyApproach()
@@ -61,5 +80,5 @@ def scheduled_gemm(a: jax.Array, b: jax.Array,
 
 __all__ = [
     "gemm", "gemm_bias_act", "gru_cell", "gru_seq",
-    "plan_gemm", "scheduled_gemm",
+    "plan_gemm", "scheduled_gemm", "tuned_block",
 ]

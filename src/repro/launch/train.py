@@ -76,7 +76,27 @@ def main(argv=None):
     ap.add_argument("--model-axis", type=int, default=1)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--inject-fault-at", type=int, default=None)
+    ap.add_argument("--tuned", action="store_true",
+                    help="activate the repro.search tuning cache for this "
+                         "process: any cache-aware ISAM kernel invoked "
+                         "(repro.kernels tuned_block/plan_gemm) picks up "
+                         "autotuned configs; the jnp model forward path is "
+                         "unaffected until Pallas kernels are wired into it "
+                         "(see ROADMAP follow-ups)")
+    ap.add_argument("--tuning-cache", default=None, metavar="PATH",
+                    help="tuning cache path (with --tuned; default: the "
+                         "repro.search default cache)")
     args = ap.parse_args(argv)
+
+    if args.tuned:
+        from ..search.cache import TuningCache, set_default_cache
+        cache = TuningCache(args.tuning_cache)
+        set_default_cache(cache)
+        print(f"[tuned] tuning cache {cache.path}: {len(cache)} entries")
+        for key in sorted(cache.keys()):
+            rec = cache.lookup(key)
+            print(f"[tuned]   {rec.meta.get('case', key)}: "
+                  f"{rec.speedup:.2f}x ({rec.backend}/{rec.strategy})")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),

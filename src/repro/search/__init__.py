@@ -1,0 +1,28 @@
+"""repro.search — joint mapping/schedule autotuning (paper Section 4).
+
+The paper frames the compiler's combinatorial choices as a *flexible
+framework that allows heuristics, cost models, and potentially machine
+learning*.  This package is that framework's search driver:
+
+  * ``space``      — ``ParamApproach``: every Approach decision point driven
+                     by an explicit, enumerable config vector; program and
+                     system-graph fingerprinting.
+  * ``strategies`` — seeded, deterministic search strategies over the space
+                     (random sampling, greedy hill-climb, evolutionary).
+  * ``evaluate``   — evaluation backends: fast ``scheduler.cost_model()``
+                     dry-runs and optional measured Pallas wall-clock, plus
+                     executor-vs-oracle validation of winning schedules.
+  * ``cache``      — persistent JSON tuning cache keyed by (program
+                     fingerprint, sysgraph, backend, jax version), consulted
+                     by ``repro.kernels`` and the benchmarks at run time.
+  * ``tune``       — the ``python -m repro.search.tune`` CLI.
+"""
+from .cache import TuningCache, TuningRecord, default_cache_path, get_default_cache
+from .space import ParamApproach, SearchSpace, program_fingerprint, tuning_key
+from .strategies import STRATEGIES, SearchOutcome, Trial
+
+__all__ = [
+    "ParamApproach", "SearchSpace", "program_fingerprint", "tuning_key",
+    "STRATEGIES", "SearchOutcome", "Trial",
+    "TuningCache", "TuningRecord", "default_cache_path", "get_default_cache",
+]

@@ -1,0 +1,205 @@
+"""Persistent tuning cache (paper Section 4 "remember winners").
+
+One JSON file maps tuning keys — ``(program fingerprint, sysgraph, backend,
+jax version)``, see ``space.tuning_key`` — to the winning config vector plus
+provenance (strategy, trials, modeled costs, resolved GEMM tile).  The cache
+is what makes search pay off across runs: ``kernels/gemm.py`` and the
+benchmarks consult it at run time, so a shape tuned once keeps its schedule
+until the toolchain (jax version) or machine description changes.
+
+Writes are atomic (tmp + rename) and reads are tolerant: a corrupt or
+missing file is an empty cache, never an error.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+SCHEMA_VERSION = 1
+
+#: Override the default cache location (e.g. in CI).
+CACHE_ENV_VAR = "REPRO_TUNING_CACHE"
+
+
+def default_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "tuning.json")
+
+
+@dataclass
+class TuningRecord:
+    """The winner for one (program, machine, backend, toolchain) cell."""
+
+    key: str
+    config: dict
+    cost: float                     # tuned cost (modeled s, or measured s)
+    baseline_cost: float            # GreedyApproach cost at tuning time
+    backend: str = "cost"           # 'cost' | 'measure'
+    strategy: str = ""
+    trials: int = 0
+    tile: tuple | None = None       # resolved (bm, bn, bk) for GEMM cases
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def speedup(self) -> float:
+        return self.baseline_cost / self.cost if self.cost > 0 else 1.0
+
+    def to_dict(self) -> dict:
+        d = {"key": self.key, "config": self.config, "cost": self.cost,
+             "baseline_cost": self.baseline_cost, "backend": self.backend,
+             "strategy": self.strategy, "trials": self.trials,
+             "meta": self.meta}
+        if self.tile is not None:
+            d["tile"] = list(self.tile)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningRecord":
+        tile = d.get("tile")
+        return cls(key=d["key"], config=dict(d.get("config", {})),
+                   cost=float(d.get("cost", 0.0)),
+                   baseline_cost=float(d.get("baseline_cost", 0.0)),
+                   backend=d.get("backend", "cost"),
+                   strategy=d.get("strategy", ""),
+                   trials=int(d.get("trials", 0)),
+                   tile=tuple(int(x) for x in tile) if tile else None,
+                   meta=dict(d.get("meta", {})))
+
+
+class TuningCache:
+    """Dict-of-records with JSON persistence."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_cache_path()
+        self._entries: dict[str, TuningRecord] | None = None
+
+    # -- persistence ---------------------------------------------------------
+    def load(self) -> dict[str, TuningRecord]:
+        if self._entries is None:
+            entries: dict[str, TuningRecord] = {}
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                for d in raw.get("records", []):
+                    try:
+                        rec = TuningRecord.from_dict(d)
+                        entries[rec.key] = rec
+                    except (KeyError, TypeError, ValueError):
+                        continue            # skip malformed record
+            except (OSError, json.JSONDecodeError):
+                pass                        # missing/corrupt file = empty
+            self._entries = entries
+        return self._entries
+
+    def save(self) -> None:
+        # Merge-on-save: re-read the file so records another process stored
+        # since our first load survive (last writer wins per *key*, not per
+        # file).  Simultaneous writes still race, but os.replace keeps the
+        # file valid and only the colliding keys can be lost.
+        ours = dict(self.load())
+        entries = TuningCache(self.path).load()
+        entries.update(ours)
+        self._entries = entries
+        payload = {"schema": SCHEMA_VERSION,
+                   "records": [r.to_dict() for r in entries.values()]}
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access ---------------------------------------------------------------
+    def lookup(self, key: str) -> TuningRecord | None:
+        return self.load().get(key)
+
+    def store(self, record: TuningRecord, save: bool = True) -> None:
+        self.load()[record.key] = record
+        if save:
+            self.save()
+
+    def keys(self):
+        return self.load().keys()
+
+    def __len__(self) -> int:
+        return len(self.load())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.load()
+
+
+# --------------------------------------------------------------------------- #
+# Process-wide default cache (what the kernels consult at run time)
+# --------------------------------------------------------------------------- #
+
+_default_cache: TuningCache | None = None
+
+
+def get_default_cache() -> TuningCache:
+    global _default_cache
+    if _default_cache is None:
+        _default_cache = TuningCache()
+    return _default_cache
+
+
+def set_default_cache(cache: TuningCache | None) -> None:
+    """Point the process at a specific cache (tests, --tuned launches)."""
+    global _default_cache
+    _default_cache = cache
+
+
+# --------------------------------------------------------------------------- #
+# GEMM convenience lookups (the kernels' entry point)
+# --------------------------------------------------------------------------- #
+
+
+def clamp_tile(tile, m: int, n: int, k: int) -> tuple[int, int, int]:
+    """Clamp a recorded/requested (bm, bn, bk) tile to an (m, n, k) problem
+    — the one definition shared by ``kernels.gemm.tuned_block``,
+    ``kernels.ops.plan_gemm`` and ``search.evaluate.gemm_tile_for``."""
+    bm, bn, bk = (int(x) for x in tile)
+    return (max(1, min(bm, m)), max(1, min(bn, n)), max(1, min(bk, k)))
+
+
+def gemm_tuning_key(m: int, n: int, k: int, graph=None,
+                    backend: str = "cost") -> str:
+    """Cache key for the canonical (m, n, k) GEMM program on ``graph``
+    (default: the single-core v5e graph the kernels schedule against)."""
+    if graph is None:
+        return _default_gemm_key(m, n, k, backend)
+    from ..core import kernels_ir as K
+    from .space import tuning_key
+    return tuning_key(K.matmul(m, n, k), graph, backend)
+
+
+@lru_cache(maxsize=1024)
+def _default_gemm_key(m: int, n: int, k: int, backend: str) -> str:
+    from ..core import kernels_ir as K
+    from ..core.sysgraph import tpu_v5e
+    from .space import tuning_key
+    return tuning_key(K.matmul(m, n, k), tpu_v5e(1), backend)
+
+
+def lookup_gemm(m: int, n: int, k: int, graph=None,
+                cache: TuningCache | None = None) -> TuningRecord | None:
+    """Best tuned record for an (m, n, k) GEMM; measured wall-clock wins
+    over cost-model records when both exist."""
+    cache = cache or get_default_cache()
+    for backend in ("measure", "cost"):
+        rec = cache.lookup(gemm_tuning_key(m, n, k, graph, backend))
+        if rec is not None:
+            return rec
+    return None

@@ -1,0 +1,222 @@
+"""Candidate evaluation backends + oracle validation (paper Section 4).
+
+Two ways to score a config vector:
+
+  * ``CostModelEvaluator`` — the fast path: re-run the static scheduler's
+    dry-run with the candidate ParamApproach and score its modeled makespan
+    (``scheduler.cost_model()``).  A cheap tile-count pre-check rejects
+    degenerate configs (tiny tiles on huge extents explode the simulated
+    stream) with ``inf`` instead of minutes of scheduling.
+
+  * ``MeasuredGemmEvaluator`` — optional wall-clock: forward the candidate's
+    tile choice as the Pallas GEMM BlockSpec (``kernels/gemm.py``) and time
+    the kernel.  Only meaningful on a real TPU backend; on CPU the kernel
+    runs in interpret mode, which is numerically faithful but slow, so the
+    tuner defaults to the cost backend.
+
+``validate_selection`` replays a schedule through ``core.executor`` against
+the ``ir.interpret`` oracle.  Because every unroll policy in the search
+space keeps reduction offsets ascending per output region and all backends
+accumulate in f64, a correct schedule replays **bit-exact** — the validation
+reports exactness, not just closeness.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.approach import Approach
+from ..core.executor import execute
+from ..core.instructions import is_elementwise
+from ..core.ir import Program, interpret, random_inputs
+from ..core.isel import Selection
+from ..core.scheduler import Schedule, ScheduleError, schedule
+from ..core.sysgraph import SystemGraph
+from .space import Config, ParamApproach
+
+
+# --------------------------------------------------------------------------- #
+# Cost-model backend
+# --------------------------------------------------------------------------- #
+
+
+class CostModelEvaluator:
+    """Score a config by the static scheduler's modeled makespan."""
+
+    def __init__(self, selection: Selection, graph: SystemGraph,
+                 max_tiles: int = 4096):
+        self.sel = selection
+        self.graph = graph
+        self.max_tiles = max_tiles
+
+    def estimated_tiles(self, approach: Approach) -> int:
+        """Upper-bound the compute-tile count the scheduler would unroll,
+        using only the approach's tile request (no scheduling).  Elementwise
+        needles coalesce their outer axes, so they count one call."""
+        prog = self.sel.program
+        total = 0
+        for si in self.sel.instrs:
+            devices = self.graph.compute_nodes_for(si.needle.name)
+            if not devices:
+                continue
+            hw_tile = devices[0].matmul_tile
+            vmem_cap = min(self.graph.memories[d.memory].capacity
+                           for d in devices)
+            extents = {na: prog.axis(ha).size
+                       for na, ha in si.mapping.axis_map}
+            req = approach.choose_tile_shape(si.needle.name, extents, hw_tile,
+                                             vmem_budget=vmem_cap // 3)
+            mapped = 1
+            for na, ext in extents.items():
+                mapped *= math.ceil(ext / max(1, min(req.get(na, ext), ext)))
+            calls = 1 if is_elementwise(si.needle.name) \
+                else si.mapping.calls(prog)
+            total += mapped * calls
+        return total
+
+    def schedule_config(self, config: Config) -> Schedule:
+        return schedule(self.sel, self.graph, ParamApproach(config))
+
+    def __call__(self, config: Config) -> float:
+        approach = ParamApproach(config)
+        if self.estimated_tiles(approach) > self.max_tiles:
+            return float("inf")
+        try:
+            return schedule(self.sel, self.graph, approach).makespan
+        except ScheduleError:
+            return float("inf")
+
+
+def gemm_tile_for(config: Config, graph: SystemGraph,
+                  m: int, n: int, k: int) -> tuple[int, int, int]:
+    """The (bm, bn, bk) tile a config implies for an (m, n, k) GEMM on
+    ``graph`` — the same hw-tile + VMEM-budget inputs the scheduler hands
+    ``choose_tile_shape`` (``Scheduler._tiles_for`` splits device VMEM three
+    ways), clamped to the problem.  One definition shared by the tuner's
+    cache records, the measured backend, and the examples."""
+    devices = graph.compute_nodes_for("mxu.matmul")
+    if devices:
+        hw_tile = min(d.matmul_tile for d in devices)
+        vmem = min(graph.memories[d.memory].capacity for d in devices) // 3
+    else:   # pragma: no cover - graph without an MXU
+        hw_tile, vmem = (128, 128, 128), None
+    from .cache import clamp_tile
+    req = ParamApproach(config).choose_tile_shape(
+        "mxu.matmul", {"i": m, "j": n, "k": k}, hw_tile, vmem_budget=vmem)
+    return clamp_tile((req["i"], req["j"], req["k"]), m, n, k)
+
+
+# --------------------------------------------------------------------------- #
+# Measured (Pallas wall-clock) backend
+# --------------------------------------------------------------------------- #
+
+
+class MeasuredGemmEvaluator:
+    """Score a config by timing the Pallas GEMM with the candidate's tile
+    choice as the BlockSpec.  jax is imported lazily so the cost-model path
+    stays numpy-only."""
+
+    def __init__(self, m: int, n: int, k: int, graph: SystemGraph,
+                 repeats: int = 3, interpret: bool | None = None):
+        import warnings
+
+        import jax
+        import jax.numpy as jnp
+        from ..kernels.gemm import gemm
+        if jax.default_backend() != "tpu":
+            warnings.warn(
+                f"measured GEMM tuning on the {jax.default_backend()!r} "
+                "backend runs Pallas in interpret mode — numerically "
+                "faithful but extremely slow on large shapes; wall-clock "
+                "results are only meaningful on TPU (use --backend cost)",
+                stacklevel=2)
+        self._gemm = gemm
+        self.m, self.n, self.k = m, n, k
+        self.graph = graph
+        self.repeats = repeats
+        self.interpret = interpret
+        key = jax.random.PRNGKey(0)
+        ka, kb = jax.random.split(key)
+        self.a = jax.random.uniform(ka, (m, k), jnp.float32, -1, 1)
+        self.b = jax.random.uniform(kb, (k, n), jnp.float32, -1, 1)
+
+    def block_for(self, config: Config) -> tuple[int, int, int]:
+        """The candidate's (bm, bn, bk) — the scheduler tile choice forwarded
+        to the kernel, clamped to the problem."""
+        return gemm_tile_for(config, self.graph, self.m, self.n, self.k)
+
+    def __call__(self, config: Config) -> float:
+        block = self.block_for(config)
+        try:
+            out = self._gemm(self.a, self.b, block=block,
+                             interpret=self.interpret)
+            out.block_until_ready()          # compile + warm
+            best = float("inf")
+            for _ in range(self.repeats):
+                t0 = time.perf_counter()
+                self._gemm(self.a, self.b, block=block,
+                           interpret=self.interpret).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            return best
+        except Exception:
+            return float("inf")
+
+
+# --------------------------------------------------------------------------- #
+# Oracle validation
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class ValidationReport:
+    exact: bool                 # bit-exact vs the ISAMIR oracle
+    max_abs_err: float
+    outputs: tuple[str, ...]
+
+    @property
+    def ok(self) -> bool:
+        """Exact, or within float32 round-off of the f64 oracle."""
+        return self.exact or self.max_abs_err < 1e-5
+
+
+def validate_selection(prog: Program, selection: Selection,
+                       graph: SystemGraph, approach: Approach,
+                       rng_seed: int = 0) -> ValidationReport:
+    """Schedule ``selection`` with ``approach``, execute the recorded stream
+    with real data (core.executor) and compare against ``ir.interpret`` on
+    the *original* program ``prog`` (transform steps adapted)."""
+    sched = schedule(selection, graph, approach)
+    return validate_schedule(prog, selection, sched, rng_seed=rng_seed)
+
+
+def validate_schedule(prog: Program, selection: Selection, sched: Schedule,
+                      rng_seed: int = 0) -> ValidationReport:
+    rng = np.random.default_rng(rng_seed)
+    ins = random_inputs(prog, rng)
+    ref = interpret(prog, ins)
+    ins2 = ins
+    for t in selection.steps:
+        ins2 = t.adapt_inputs(ins2)
+    got = execute(sched, selection, ins2)
+    outs = {k: got[k] for k in ref}
+    for t in reversed(selection.steps):
+        outs = t.adapt_outputs(outs)
+    exact = True
+    max_err = 0.0
+    for k in ref:
+        got_k = np.asarray(outs[k])
+        if got_k.shape != ref[k].shape and got_k.size == ref[k].size:
+            # FuseAxes.adapt_outputs leaves the un-merge to the caller
+            got_k = got_k.reshape(ref[k].shape)
+        outs[k] = got_k
+        if not np.array_equal(outs[k], ref[k]):
+            exact = False
+        diff = np.abs(np.asarray(outs[k], np.float64)
+                      - np.asarray(ref[k], np.float64))
+        if diff.size:
+            max_err = max(max_err, float(diff.max()))
+    return ValidationReport(exact=exact, max_abs_err=max_err,
+                            outputs=tuple(ref))

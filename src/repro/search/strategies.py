@@ -1,0 +1,176 @@
+"""Search strategies over the Approach config space (paper Section 4).
+
+Three drivers with one shared contract: ``strategy(space, evaluate, trials,
+seed) -> SearchOutcome`` where ``evaluate(config) -> cost`` (lower is
+better, ``inf`` = infeasible).  All strategies
+
+  * are **deterministic** under a fixed seed (a private ``random.Random``),
+  * evaluate the space's greedy-equivalent **baseline first**, so the
+    reported best is never worse than ``GreedyApproach``,
+  * dedupe configs, so a trial budget is a budget of *distinct* evaluations.
+
+Ties are broken toward the earliest-evaluated config, i.e. toward the
+baseline — search only moves off the paper's heuristics when a candidate is
+strictly better.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable
+
+from .space import Config, SearchSpace, config_key
+
+Evaluator = Callable[[Config], float]
+
+
+@dataclass(frozen=True)
+class Trial:
+    """One evaluated point."""
+
+    index: int
+    config: Config
+    cost: float
+
+
+@dataclass
+class SearchOutcome:
+    strategy: str
+    best_config: Config
+    best_cost: float
+    baseline_cost: float
+    trials: list[Trial] = field(default_factory=list)
+
+    @property
+    def evaluations(self) -> int:
+        return len(self.trials)
+
+    @property
+    def speedup(self) -> float:
+        """Modeled baseline/tuned ratio (>= 1.0 by construction)."""
+        if self.best_cost <= 0:
+            return 1.0
+        return self.baseline_cost / self.best_cost
+
+
+class _Runner:
+    """Shared bookkeeping: dedup, trial log, best tracking."""
+
+    def __init__(self, space: SearchSpace, evaluate: Evaluator, trials: int):
+        self.space = space
+        self.evaluate = evaluate
+        self.budget = max(1, trials)
+        self.seen: set[tuple] = set()
+        self.trials: list[Trial] = []
+        self.best: Trial | None = None
+
+    @property
+    def exhausted(self) -> bool:
+        return len(self.trials) >= self.budget
+
+    def run(self, config: Config) -> Trial | None:
+        """Evaluate ``config`` unless duplicate / over budget."""
+        key = config_key(config)
+        if key in self.seen or self.exhausted:
+            return None
+        self.seen.add(key)
+        cost = float(self.evaluate(config))
+        t = Trial(len(self.trials), dict(config), cost)
+        self.trials.append(t)
+        if self.best is None or cost < self.best.cost:
+            self.best = t
+        return t
+
+    def outcome(self, strategy: str) -> SearchOutcome:
+        baseline = self.trials[0].cost if self.trials else float("inf")
+        assert self.best is not None
+        return SearchOutcome(strategy=strategy,
+                             best_config=dict(self.best.config),
+                             best_cost=self.best.cost,
+                             baseline_cost=baseline,
+                             trials=list(self.trials))
+
+
+def random_search(space: SearchSpace, evaluate: Evaluator,
+                  trials: int = 32, seed: int = 0) -> SearchOutcome:
+    """Baseline + uniform random sampling of distinct configs."""
+    rng = random.Random(seed)
+    r = _Runner(space, evaluate, trials)
+    r.run(space.baseline())
+    attempts = 0
+    while not r.exhausted and attempts < trials * 50:
+        attempts += 1
+        r.run(space.random_config(rng))
+    return r.outcome("random")
+
+
+def hill_climb(space: SearchSpace, evaluate: Evaluator,
+               trials: int = 32, seed: int = 0) -> SearchOutcome:
+    """Greedy first-improvement hill-climb from the baseline.
+
+    The incumbent's single-mutation neighborhood is walked in the space's
+    deterministic order; the first strictly better neighbor becomes the new
+    incumbent (restarting the walk there).  A fully explored neighborhood
+    with no improvement is a local optimum — the climb then restarts from a
+    random config (the incumbent is global, so restarts can only help).
+    The seed only influences restart points, so small budgets behave
+    identically across seeds until the first local optimum.  The outcome's
+    best is global across all restarts (the runner tracks it), while the
+    climb itself descends from wherever it restarted."""
+    rng = random.Random(seed)
+    r = _Runner(space, evaluate, trials)
+    current = r.run(space.baseline())
+    frontier = space.neighbors(current.config)
+    attempts = 0
+    while not r.exhausted and attempts < trials * 50:
+        attempts += 1
+        cand = next(frontier, None)
+        if cand is None:               # local optimum: random restart
+            restart = r.run(space.random_config(rng))
+            if restart is not None:
+                current = restart
+                frontier = space.neighbors(current.config)
+            continue
+        t = r.run(cand)
+        if t is not None and t.cost < current.cost:
+            current = t
+            frontier = space.neighbors(current.config)
+    return r.outcome("hillclimb")
+
+
+def evolutionary(space: SearchSpace, evaluate: Evaluator,
+                 trials: int = 32, seed: int = 0,
+                 population: int = 8, elite: int = 3) -> SearchOutcome:
+    """(mu + lambda)-style beam/evolutionary search.
+
+    Generation 0 is the baseline plus random configs; each later generation
+    keeps the ``elite`` best evaluated so far as parents and fills the
+    population with crossovers + mutations of the parents."""
+    rng = random.Random(seed)
+    r = _Runner(space, evaluate, trials)
+    r.run(space.baseline())
+    for _ in range(population - 1):
+        if r.exhausted:
+            break
+        r.run(space.random_config(rng))
+    attempts = 0
+    while not r.exhausted and attempts < trials * 50:
+        parents = sorted(r.trials, key=lambda t: (t.cost, t.index))[:elite]
+        made = 0
+        while made < population and not r.exhausted and attempts < trials * 50:
+            attempts += 1
+            pa, pb = rng.choice(parents), rng.choice(parents)
+            child = space.crossover(pa.config, pb.config, rng)
+            child = space.mutate(child, rng, n_mutations=1)
+            if r.run(child) is not None:
+                made += 1
+        if made == 0:       # space exhausted around the elites
+            break
+    return r.outcome("evolve")
+
+
+STRATEGIES: dict[str, Callable[..., SearchOutcome]] = {
+    "random": random_search,
+    "hillclimb": hill_climb,
+    "evolve": evolutionary,
+}
