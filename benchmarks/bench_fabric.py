@@ -1,0 +1,43 @@
+"""Fabric strong-scaling suite: distributed GEMM makespans vs chip count.
+
+For each of two DeepBench GEMM shapes, reports the 1-chip modeled makespan
+and then the best distributed makespan (over partition axis x collective
+algorithm, default greedy per-chip tiles) on 2/4/8-chip ICI rings — the
+``repro.fabric`` event-driven simulator is the measurement device.
+
+CSV: name, us_per_call = modeled makespan (us), derived =
+"speedup=<vs 1 chip>/axis=<m|n|k>/alg=<ring|bidir>/comm_end=<s>".
+"""
+from __future__ import annotations
+
+from repro.fabric.collectives import ALGORITHMS
+from repro.fabric.partition import partition, partition_axes
+from repro.fabric.simulate import simulate_partition, single_chip_makespan
+from repro.fabric.topology import Topology, ring
+from repro.search.tune import FABRIC_GEMM_SIZES
+
+CHIP_COUNTS = (2, 4, 8)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    chip_graph = Topology.chip_graph()
+    for m, n, k in FABRIC_GEMM_SIZES:
+        pp1 = partition("gemm", (m, n, k), "m", 1)
+        one = single_chip_makespan(pp1, chip_graph)
+        rows.append((f"fabric_gemm_{m}x{n}x{k}_x1", one * 1e6,
+                     "1-chip reference (scheduler.cost_model)"))
+        for chips in CHIP_COUNTS:
+            topo = ring(chips)
+            best = None
+            for axis in partition_axes("gemm"):
+                pp = partition("gemm", (m, n, k), axis, chips)
+                for alg in ALGORITHMS:
+                    res = simulate_partition(pp, topo, None, alg, chip_graph)
+                    if best is None or res.makespan < best.makespan:
+                        best = res
+            rows.append((
+                f"fabric_gemm_{m}x{n}x{k}_x{chips}", best.makespan * 1e6,
+                f"speedup={one / best.makespan:.2f}x/axis={best.axis}"
+                f"/alg={best.algorithm}/comm_end={best.comm_end:.3e}"))
+    return rows

@@ -5,14 +5,6 @@
 Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
 rows (plus per-suite errors) as machine-readable JSON so the perf trajectory
 is comparable across PRs (e.g. ``BENCH_mapper.json``).
-Suites:
-    mapper    — paper Section 6.1 (mapping coverage)
-    gemm      — paper Figure 3 (DeepBench GEMM, ISAM vs kernel library)
-    gru       — paper Figure 4 (128-step GRU, fusion + persistent weights)
-    resnet    — paper Figure 5 (ResNet-50 layers via conv->matmul mapping)
-    kernels   — Pallas kernel microbenchmarks vs jnp oracles
-    roofline  — dry-run roofline terms per (arch x shape x mesh)
-    tuned     — repro.search autotuner vs GreedyApproach (DeepBench GEMMs)
 """
 from __future__ import annotations
 
@@ -21,39 +13,60 @@ import json
 import sys
 import traceback
 
+#: suite name -> (module under benchmarks/, one-line description).  The
+#: modules import lazily in main() (several pull in jax); this table is
+#: what --help shows.
+SUITES = {
+    "mapper": ("bench_mapper", "paper Section 6.1 (mapping coverage)"),
+    "gemm": ("bench_gemm",
+             "paper Figure 3 (DeepBench GEMM, ISAM vs kernel library)"),
+    "gru": ("bench_gru",
+            "paper Figure 4 (128-step GRU, fusion + persistent weights)"),
+    "resnet": ("bench_resnet",
+               "paper Figure 5 (ResNet-50 layers via conv->matmul mapping)"),
+    "kernels": ("bench_kernels", "Pallas kernel microbenchmarks vs jnp"),
+    "roofline": ("bench_roofline",
+                 "dry-run roofline terms per (arch x shape x mesh)"),
+    "tuned": ("bench_tuned",
+              "repro.search autotuner vs GreedyApproach (DeepBench GEMMs)"),
+    "fabric": ("bench_fabric",
+               "repro.fabric 2/4/8-chip strong scaling (DeepBench GEMMs)"),
+}
+
+
+def _epilog() -> str:
+    lines = ["suites:"]
+    lines += [f"  {name:<9} {desc}" for name, (_, desc) in SUITES.items()]
+    return "\n".join(lines)
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_epilog())
+    ap.add_argument("--only", default=None, metavar="SUITE",
+                    help="run a single suite (see list below)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (machine-readable "
                          "perf trajectory)")
     args = ap.parse_args()
 
-    from . import (bench_gemm, bench_gru, bench_kernels, bench_mapper,
-                   bench_resnet, bench_roofline, bench_tuned)
-    suites = {
-        "mapper": bench_mapper.run,
-        "gemm": bench_gemm.run,
-        "gru": bench_gru.run,
-        "resnet": bench_resnet.run,
-        "kernels": bench_kernels.run,
-        "roofline": bench_roofline.run,
-        "tuned": bench_tuned.run,
-    }
-    if args.only:
-        if args.only not in suites:
-            print(f"unknown suite {args.only!r}; available: "
-                  f"{', '.join(sorted(suites))}", file=sys.stderr)
-            raise SystemExit(2)
-        suites = {args.only: suites[args.only]}
+    if args.only and args.only not in SUITES:
+        print(f"unknown suite {args.only!r}; available: "
+              f"{', '.join(sorted(SUITES))}", file=sys.stderr)
+        raise SystemExit(2)
+    selected = {args.only: SUITES[args.only]} if args.only else SUITES
+
+    import importlib
+    suites = {name: importlib.import_module(f".{mod}", package=__package__)
+              for name, (mod, _) in selected.items()}
 
     print("name,us_per_call,derived")
     records: list[dict] = []
     failures = 0
-    for name, fn in suites.items():
+    for name, module in suites.items():
         try:
-            for row_name, us, derived in fn():
+            for row_name, us, derived in module.run():
                 print(f"{row_name},{us:.2f},{derived}", flush=True)
                 records.append({"suite": name, "name": row_name,
                                 "us_per_call": us, "derived": derived})

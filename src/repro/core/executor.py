@@ -94,7 +94,11 @@ class Machine:
             if w:
                 out_specs.append((nb_name, region, arr))
 
-        outs = interpret(needle, ins)
+        # The machine state is f64 end-to-end; rounding tile outputs to the
+        # buffer dtype here would make multi-tile accumulation chains (and
+        # chip-chained fabric reductions) diverge from the oracle's
+        # single-final-cast contract.
+        outs = interpret(needle, ins, cast_outputs=False)
         for nb_name, region, arr in out_specs:
             res = outs[nb_name]
             inv = _operand_view_inverse(arr.shape, si, nb_name, res)

@@ -389,12 +389,16 @@ def _np_dtype(dtype: str):
 
 
 def interpret(prog: Program, inputs: Mapping[str, np.ndarray],
-              accumulate_f64: bool = True) -> dict[str, np.ndarray]:
+              accumulate_f64: bool = True,
+              cast_outputs: bool = True) -> dict[str, np.ndarray]:
     """Execute ``prog`` per ISAMIR analysis semantics: each statement runs to
     completion over the full iteration domain before the next begins.
 
     Buffers not present in ``inputs`` are zero-initialised.  Returns the final
-    contents of ``prog.outputs``.
+    contents of ``prog.outputs``, cast to each buffer's dtype unless
+    ``cast_outputs`` is false (the executor replays needle programs *inside*
+    a larger f64 computation and must not round intermediate accumulators —
+    only the whole program's final outputs are cast, like the oracle).
     """
     for a in prog.axes:
         if a.symbolic:
@@ -452,6 +456,8 @@ def interpret(prog: Program, inputs: Mapping[str, np.ndarray],
         else:  # pragma: no cover
             raise IRError(f"unhandled op {s.op}")
 
+    if not cast_outputs:
+        return {name: bufs[name] for name in prog.outputs}
     return {name: bufs[name].astype(_np_dtype(prog.buffer(name).dtype))
             for name in prog.outputs}
 

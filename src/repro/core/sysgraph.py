@@ -70,10 +70,19 @@ class SystemGraph:
 
     def add_edge(self, src: str, dst: str, bandwidth: float,
                  latency: float = 1e-6, issuer: str = "host",
-                 bidirectional: bool = True) -> None:
+                 bidirectional: bool = True,
+                 rev_issuer: str | None = None) -> None:
+        """Add a movement edge (and, by default, its reverse).
+
+        ``issuer`` is the device that emits the forward copy; the reverse
+        copy is emitted by ``rev_issuer`` when given (a pull-style DMA is
+        issued by the *receiving* side, so the two directions generally
+        have different issuers) and falls back to ``issuer`` otherwise.
+        """
         self.edges.append(MoveEdge(src, dst, bandwidth, latency, issuer))
         if bidirectional:
-            self.edges.append(MoveEdge(dst, src, bandwidth, latency, issuer))
+            self.edges.append(MoveEdge(dst, src, bandwidth, latency,
+                                       rev_issuer or issuer))
 
     # -- queries --------------------------------------------------------------
     def edge(self, src: str, dst: str) -> MoveEdge:
@@ -134,26 +143,41 @@ V5E_ICI_BW = 50e9              # bytes/s per link
 V5E_CLOCK = 0.94e9
 
 
+def add_v5e_chip(g: SystemGraph, c: int, host_mem_node: str = "host") -> None:
+    """Add one v5e chip (HBM + VMEM + core, PCIe-attached to the host) to
+    ``g``.  Fabric wiring between chips is layered on top by
+    ``repro.fabric.topology`` — this helper deliberately knows nothing
+    about inter-chip links."""
+    hbm, vmem = f"hbm{c}", f"vmem{c}"
+    g.add_memory(hbm, V5E_HBM_BYTES, level=1)
+    g.add_memory(vmem, V5E_VMEM_BYTES, level=2)
+    # PCIe: host pushes down, the chip's core DMAs back up.
+    g.add_edge(host_mem_node, hbm, bandwidth=32e9, latency=2e-6,
+               issuer="host", rev_issuer=f"core{c}")
+    g.add_edge(hbm, vmem, bandwidth=V5E_HBM_BW, latency=1e-7,
+               issuer=f"core{c}")
+    g.add_compute(
+        f"core{c}", vmem,
+        {"mxu.", "vpu.", "fused."},
+        flops=V5E_PEAK_FLOPS,
+        matmul_tile=(128, 128, 128), vector_lanes=8 * 128,
+        clock_hz=V5E_CLOCK)
+
+
 def tpu_v5e(n_cores: int = 1, host_mem: int = 512 << 30) -> SystemGraph:
-    """One v5e chip (or several connected by ICI) as a system graph."""
+    """One v5e chip (or several connected by an ICI ring) as a system graph.
+
+    Multi-chip wiring is delegated to ``repro.fabric.topology.ring`` — a
+    proper bidirectional ring (with the wraparound link the old ad-hoc
+    wiring was missing) whose per-direction copies are issued by the
+    receiving chip's core."""
     g = SystemGraph(f"tpu_v5e_x{n_cores}")
     g.add_memory("host", host_mem, level=0)
     for c in range(n_cores):
-        hbm, vmem = f"hbm{c}", f"vmem{c}"
-        g.add_memory(hbm, V5E_HBM_BYTES, level=1)
-        g.add_memory(vmem, V5E_VMEM_BYTES, level=2)
-        g.add_edge("host", hbm, bandwidth=32e9, latency=2e-6)       # PCIe
-        g.add_edge(hbm, vmem, bandwidth=V5E_HBM_BW, latency=1e-7,
-                   issuer=f"core{c}")
-        g.add_compute(
-            f"core{c}", vmem,
-            {"mxu.", "vpu.", "fused."},
-            flops=V5E_PEAK_FLOPS,
-            matmul_tile=(128, 128, 128), vector_lanes=8 * 128,
-            clock_hz=V5E_CLOCK)
-        if c:  # ICI ring neighbour
-            g.add_edge(f"hbm{c - 1}", hbm, bandwidth=V5E_ICI_BW, latency=1e-6,
-                       issuer=f"core{c}")
+        add_v5e_chip(g, c)
+    if n_cores > 1:
+        from ..fabric.topology import ring
+        ring(n_cores).wire_ici(g)
     return g
 
 

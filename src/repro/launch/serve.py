@@ -48,36 +48,50 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--sample", action="store_true",
+                    help="sample from the logits instead of greedy argmax")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result record as JSON (mirrors "
+                         "benchmarks/run.py --json)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
+    # One split per consumer: reusing a PRNG key across init / randint /
+    # normal / categorical correlates the streams.
     rng = jax.random.PRNGKey(0)
-    params = model.init(rng)
+    rng, k_init, k_tokens, k_audio, k_gen = jax.random.split(rng, 5)
+    params = model.init(k_init)
 
     batch = {"tokens": jax.random.randint(
-        rng, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+        k_tokens, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
     if cfg.family == "vlm":
         batch["patch_embeds"] = jnp.zeros(
             (args.batch, cfg.frontend_tokens, cfg.d_model),
             cfg.activation_dtype)
     if cfg.family == "audio":
         batch["audio_embeds"] = jax.random.normal(
-            rng, (args.batch, cfg.frontend_tokens, cfg.d_model)
+            k_audio, (args.batch, cfg.frontend_tokens, cfg.d_model)
         ).astype(cfg.activation_dtype)
 
     t0 = time.perf_counter()
-    toks = generate(model, params, batch, args.gen)
+    toks = generate(model, params, batch, args.gen,
+                    greedy=not args.sample, rng=k_gen)
     toks.block_until_ready()
     dt = time.perf_counter() - t0
     total = args.batch * args.gen
-    print(json.dumps({
+    record = {
         "arch": cfg.name, "batch": args.batch,
         "prompt_len": args.prompt_len, "generated": args.gen,
+        "greedy": not args.sample,
         "tokens": int(total), "wall_s": round(dt, 3),
         "tok_per_s": round(total / dt, 2),
         "sample": np.asarray(toks[0, :8]).tolist(),
-    }))
+    }
+    print(json.dumps(record))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "rows": [record]}, f, indent=2)
     return toks
 
 

@@ -5,11 +5,16 @@
 
 Suites (the paper's evaluation set, Section 6):
 
-  * ``gemm`` — the DeepBench GEMM shapes of Figure 3,
-  * ``gru``  — the GRU cell (Figure 4 sizes),
-  * ``conv`` — conv→matmul extraction cases (``core/kernels_ir.py`` convs
-               through the ``fuse_axes_for_calls`` ISAM-TVM path),
-  * ``all``  — everything.
+  * ``gemm``   — the DeepBench GEMM shapes of Figure 3,
+  * ``gru``    — the GRU cell (Figure 4 sizes),
+  * ``conv``   — conv→matmul extraction cases (``core/kernels_ir.py`` convs
+                 through the ``fuse_axes_for_calls`` ISAM-TVM path),
+  * ``fabric`` — distributed GEMMs on a multi-chip fabric (``--chips`` /
+                 ``--topology``): tunes (partition axis, collective
+                 algorithm, per-chip tiles) *jointly* against the
+                 ``repro.fabric`` event-driven simulator, anchored to the
+                 untuned multi-chip baseline (axis=m, ring, greedy tiles),
+  * ``all``    — every single-chip suite (fabric stays explicit).
 
 For every case the tuner (1) maps + selects instructions once, (2) searches
 the ParamApproach config space with the chosen strategy — the greedy-
@@ -57,6 +62,10 @@ DEEPBENCH_GEMM_SIZES = [
 
 # DeepBench RNN sizes (batch, hidden), input = hidden (paper Figure 4).
 GRU_SIZES = [(16, 256), (32, 512)]
+
+# Fabric-suite shapes: one large library-friendly GEMM and one awkward one
+# (the strong-scaling pair bench_fabric.py also sweeps).
+FABRIC_GEMM_SIZES = [(5124, 700, 2048), (1760, 128, 1760)]
 
 # conv→matmul extraction cases: (name, conv2d kwargs).  Small enough that
 # per-trial rescheduling stays cheap; the mapping structure (im2col-style
@@ -224,6 +233,55 @@ def tune_case(case: TuneCase, graph: SystemGraph, strategy: str,
                       config=dict(outcome.best_config))
 
 
+def tune_fabric_case(m: int, n: int, k: int, topo, strategy: str,
+                     trials: int, seed: int,
+                     validate: bool = True) -> CaseReport:
+    """Joint distributed tuning of one GEMM shape on one fabric: the config
+    vector spans (partition axis, collective algorithm, per-chip tiles) and
+    candidates are scored by the ``repro.fabric`` simulator's distributed
+    makespan.  Trial 0 is the untuned multi-chip baseline, so the tuned
+    config is <= the untuned fabric default by construction."""
+    from ..core.kernels_ir import matmul
+    from ..fabric.partition import partition_gemm, replay_bitexact
+    from ..fabric.simulate import VALIDATE_DIM_CAP as FAB_CAP
+    from ..fabric.simulate import FabricEvaluator
+    from ..fabric.topology import Topology
+
+    t0 = time.time()
+    space = SearchSpace.for_fabric("gemm")
+    evaluate = FabricEvaluator("gemm", (m, n, k), topo)
+    outcome = STRATEGIES[strategy](space, evaluate, trials=trials, seed=seed)
+
+    validation = None
+    if validate:
+        pm, pn, pk = (max(topo.n_chips, min(d, FAB_CAP)) for d in (m, n, k))
+        axis = outcome.best_config.get("part_axis", "m")
+        proxy = partition_gemm(pm, pn, pk, axis, topo.n_chips)
+        validation = replay_bitexact(proxy, Topology.chip_graph(),
+                                     ParamApproach(outcome.best_config),
+                                     rng_seed=seed)
+
+    key = tuning_key(matmul(m, n, k), topo.build_graph(), "fabric")
+    return CaseReport(name=f"fabric_gemm_{m}x{n}x{k}_{topo.name}", key=key,
+                      backend="fabric",
+                      greedy_cost=outcome.baseline_cost,
+                      tuned_cost=outcome.best_cost,
+                      outcome=outcome, validation=validation,
+                      elapsed_s=time.time() - t0,
+                      config=dict(outcome.best_config))
+
+
+def fabric_record_for(report: CaseReport, topo, strategy: str) -> TuningRecord:
+    return TuningRecord(
+        key=report.key, config=report.config, cost=report.tuned_cost,
+        baseline_cost=report.greedy_cost, backend="fabric",
+        strategy=strategy, trials=report.outcome.evaluations,
+        meta={"case": report.name, "topology": topo.name,
+              "chips": topo.n_chips,
+              "speedup": round(report.greedy_cost
+                               / max(report.tuned_cost, 1e-30), 4)})
+
+
 def record_for(case: TuneCase, report: CaseReport, graph: SystemGraph,
                strategy: str) -> TuningRecord:
     tile = None
@@ -243,8 +301,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.search.tune",
         description="Joint mapping/schedule autotuner with persistent cache.")
-    ap.add_argument("--suite", choices=["gemm", "gru", "conv", "all"],
+    ap.add_argument("--suite",
+                    choices=["gemm", "gru", "conv", "fabric", "all"],
                     default="gemm")
+    ap.add_argument("--chips", type=int, default=4,
+                    help="fabric suite: number of chips")
+    ap.add_argument("--topology", choices=["ring", "torus", "host"],
+                    default="ring", help="fabric suite: fabric shape")
     ap.add_argument("--trials", type=int, default=32)
     ap.add_argument("--strategy", choices=sorted(STRATEGIES),
                     default="hillclimb")
@@ -263,29 +326,56 @@ def main(argv=None) -> int:
 
     graph = make_graph(args.graph)
     cache = TuningCache(args.cache)
-    cases = build_cases(args.suite, args.limit)
-    if not cases:
-        print("no cases selected", file=sys.stderr)
-        return 2
-
-    print(f"# tuning {len(cases)} case(s): suite={args.suite} "
-          f"strategy={args.strategy} trials={args.trials} "
-          f"backend={args.backend} graph={graph.name}")
-    print(f"# cache: {cache.path}")
     reports: list[CaseReport] = []
     failures = 0
-    for case in cases:
-        rep = tune_case(case, graph, args.strategy, args.trials, args.seed,
-                        args.backend, validate=not args.no_validate)
+
+    if args.suite == "fabric":
+        from ..fabric.topology import make_topology
+        topo = make_topology(args.topology, args.chips)
+        shapes = FABRIC_GEMM_SIZES[:args.limit] if args.limit \
+            else FABRIC_GEMM_SIZES
+        print(f"# tuning {len(shapes)} fabric case(s): chips={args.chips} "
+              f"topology={topo.name} strategy={args.strategy} "
+              f"trials={args.trials}")
+        print(f"# cache: {cache.path}")
+        runs = [(f"fabric_gemm_{m}x{n}x{k}_{topo.name}",
+                 lambda m=m, n=n, k=k: tune_fabric_case(
+                     m, n, k, topo, args.strategy, args.trials, args.seed,
+                     validate=not args.no_validate))
+                for m, n, k in shapes]
+        recorder = lambda rep: fabric_record_for(rep, topo, args.strategy)  # noqa: E731
+    else:
+        cases = build_cases(args.suite, args.limit)
+        if not cases:
+            print("no cases selected", file=sys.stderr)
+            return 2
+        print(f"# tuning {len(cases)} case(s): suite={args.suite} "
+              f"strategy={args.strategy} trials={args.trials} "
+              f"backend={args.backend} graph={graph.name}")
+        print(f"# cache: {cache.path}")
+        by_name = {}
+        runs = []
+        for case in cases:
+            by_name[case.name] = case
+            runs.append((case.name,
+                         lambda case=case: tune_case(
+                             case, graph, args.strategy, args.trials,
+                             args.seed, args.backend,
+                             validate=not args.no_validate)))
+        recorder = lambda rep: record_for(  # noqa: E731
+            by_name[rep.name], rep, graph, args.strategy)
+
+    for name, run in runs:
+        rep = run()
         reports.append(rep)
-        cache.store(record_for(case, rep, graph, args.strategy), save=False)
+        cache.store(recorder(rep), save=False)
         v = rep.validation
         vtxt = ("-" if v is None else
                 ("exact" if v.exact else f"err={v.max_abs_err:.2e}"))
         status = "ok" if rep.ok else "FAIL"
         if not rep.ok:
             failures += 1
-        print(f"[{status}] {case.name}: greedy={rep.greedy_cost:.3e}s "
+        print(f"[{status}] {rep.name}: greedy={rep.greedy_cost:.3e}s "
               f"tuned={rep.tuned_cost:.3e}s "
               f"speedup={rep.greedy_cost / max(rep.tuned_cost, 1e-30):.2f}x "
               f"oracle={vtxt} ({rep.outcome.evaluations} trials, "
@@ -294,12 +384,16 @@ def main(argv=None) -> int:
     print(f"# wrote {len(reports)} record(s) to {cache.path}")
 
     if args.json:
+        meta = {"schema": 1, "suite": args.suite,
+                "strategy": args.strategy, "trials": args.trials,
+                "backend": args.backend, "graph": graph.name,
+                "cache": cache.path, "failures": failures}
+        if args.suite == "fabric":
+            meta["chips"] = args.chips
+            meta["topology"] = args.topology
         with open(args.json, "w") as f:
-            json.dump({"schema": 1, "suite": args.suite,
-                       "strategy": args.strategy, "trials": args.trials,
-                       "backend": args.backend, "graph": graph.name,
-                       "cache": cache.path, "failures": failures,
-                       "rows": [r.row() for r in reports]}, f, indent=2)
+            json.dump({**meta, "rows": [r.row() for r in reports]}, f,
+                      indent=2)
         print(f"# report: {args.json}")
     return 1 if failures else 0
 
