@@ -1,0 +1,187 @@
+"""Persistent ``CompiledKernel`` artifact cache.
+
+Layered on the ``repro.search`` fingerprinting: the key is (program
+fingerprint, sysgraph fingerprint, *approach* fingerprint, backend, jax
+version), so an artifact is reused only when the whole compile is
+reproducible — a different machine description, a different config vector or
+a toolchain bump all miss.  One JSON file, atomic writes, warn-once on a
+corrupt file (same contract as the tuning cache).
+
+The process-wide default cache is *opt-in* (``set_default_artifact_cache``):
+library entry points like ``plan_gemm`` stay purely in-memory-memoized
+unless a launch (``--tuned``), the CLI, or a test activates a cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from ..core.sysgraph import SystemGraph
+from ..search import space as _space
+from ..search.cache import CACHE_ERRORS, warn_corrupt_cache
+from .artifact import ARTIFACT_SCHEMA, CompiledKernel
+
+#: Override the default artifact-cache location (e.g. in CI).
+CACHE_ENV_VAR = "REPRO_COMPILE_CACHE"
+
+
+def default_artifact_cache_path() -> str:
+    env = os.environ.get(CACHE_ENV_VAR)
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                        "compiled.json")
+
+
+def approach_fingerprint(approach) -> str:
+    """Stable identity of an Approach for artifact keying.
+
+    ``ParamApproach``-style approaches expose their config vector; the
+    stateless heuristic approaches reduce to their class name.  Approaches
+    with hidden state (wrappers, RNG-driven) get a non-reusable fingerprint
+    so they are never served a cached artifact."""
+    cfg = getattr(approach, "config", None)
+    if isinstance(cfg, dict):
+        return "cfg:" + json.dumps(
+            {k: cfg[k] for k in sorted(cfg)}, sort_keys=True)
+    name = type(approach).__name__ if approach is not None else "GreedyApproach"
+    if name in ("GreedyApproach", "Approach"):
+        return "greedy"
+    if name == "CostModelApproach":
+        return f"costmodel:{getattr(approach, 'samples', 0)}" \
+               f":{getattr(approach, 'seed', 0)}"
+    return f"opaque:{name}:{id(approach)}"
+
+
+def cacheable_approach(approach) -> bool:
+    return not approach_fingerprint(approach).startswith("opaque:")
+
+
+def isa_fingerprint(isa) -> str:
+    """Structural hash of the needle set in play — two compiles of the same
+    program under different ISAs must never share an artifact."""
+    if not isa:
+        return "-"
+    import hashlib
+    parts = sorted(f"{n.name}@{_space.program_fingerprint(n)}" for n in isa)
+    return hashlib.sha256(";".join(parts).encode()).hexdigest()[:12]
+
+
+def artifact_key_from_parts(prog_name: str, prog_fp: str, graph_name: str,
+                            graph_fp: str, approach_fp: str, backend: str,
+                            isa_fp: str = "-",
+                            allow_transforms: bool = True) -> str:
+    return (f"{prog_name}@{prog_fp}|{graph_name}@{graph_fp}"
+            f"|{approach_fp}|{backend}|isa={isa_fp}"
+            f"|xf={int(bool(allow_transforms))}|jax={_space.jax_version()}")
+
+
+def artifact_key(prog, graph: SystemGraph | str, approach,
+                 backend: str = "cost", isa=None,
+                 allow_transforms: bool = True) -> str:
+    """(program fp, sysgraph fp, approach fp, backend, isa fp, transform
+    policy, jax version)."""
+    if isinstance(graph, SystemGraph):
+        gname, gfp = graph.name, _space.sysgraph_fingerprint(graph)
+    else:
+        gname, _, gfp = graph.partition("@")
+    return artifact_key_from_parts(prog.name,
+                                   _space.program_fingerprint(prog),
+                                   gname, gfp,
+                                   approach_fingerprint(approach), backend,
+                                   isa_fingerprint(isa), allow_transforms)
+
+
+class ArtifactCache:
+    """Dict of ``CompiledKernel`` dicts with JSON persistence."""
+
+    def __init__(self, path: str | None = None):
+        self.path = path or default_artifact_cache_path()
+        self._entries: dict[str, dict] | None = None
+
+    # -- persistence ---------------------------------------------------------
+    def load(self) -> dict[str, dict]:
+        if self._entries is None:
+            entries: dict[str, dict] = {}
+            raw = None
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+            except OSError:
+                pass                          # missing file = empty cache
+            except ValueError as e:           # json.JSONDecodeError
+                warn_corrupt_cache(self.path, e)
+            if isinstance(raw, dict):
+                for d in raw.get("artifacts", []):
+                    if isinstance(d, dict) and "key" in d:
+                        entries[d["key"]] = d
+            self._entries = entries
+        return self._entries
+
+    def save(self) -> None:
+        # Merge-on-save (same contract as the tuning cache): last writer
+        # wins per key, not per file.
+        ours = dict(self.load())
+        entries = ArtifactCache(self.path).load()
+        entries.update(ours)
+        self._entries = entries
+        payload = {"schema": ARTIFACT_SCHEMA,
+                   "artifacts": list(entries.values())}
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access --------------------------------------------------------------
+    def lookup(self, key: str) -> CompiledKernel | None:
+        d = self.load().get(key)
+        if d is None:
+            return None
+        try:
+            return CompiledKernel.from_dict(d)
+        except CACHE_ERRORS as e:
+            warn_corrupt_cache(self.path, e)
+            return None
+
+    def store(self, artifact: CompiledKernel, save: bool = True) -> None:
+        self.load()[artifact.key] = artifact.to_dict()
+        if save:
+            self.save()
+
+    def keys(self):
+        return self.load().keys()
+
+    def __len__(self) -> int:
+        return len(self.load())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.load()
+
+
+# --------------------------------------------------------------------------- #
+# Process-wide default cache (opt-in)
+# --------------------------------------------------------------------------- #
+
+_default_cache: ArtifactCache | None = None
+
+
+def get_default_artifact_cache() -> ArtifactCache | None:
+    """The active artifact cache, or None when none has been activated."""
+    return _default_cache
+
+
+def set_default_artifact_cache(cache: ArtifactCache | None) -> None:
+    """Activate (or deactivate) the process-wide artifact cache — used by
+    ``--tuned`` launches, the CLI, and tests."""
+    global _default_cache
+    _default_cache = cache

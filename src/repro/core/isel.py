@@ -51,8 +51,12 @@ class Selection:
         return sum(si.mapping.calls(self.program) for si in self.instrs)
 
 
-def _candidates(prog: Program, isa: list[Program],
-                max_per_needle: int = 64) -> list[SelectedInstr]:
+def candidate_instructions(prog: Program, isa: list[Program],
+                           max_per_needle: int = 64) -> list[SelectedInstr]:
+    """The mapping stage: every way an ISA needle identifies inside ``prog``,
+    deduplicated to the fewest-calls mapping per statement window.  This is
+    the ``Map`` pass of the compilation pipeline (``repro.compile``);
+    ``select_from_candidates`` turns its output into a cover."""
     cands: list[SelectedInstr] = []
     for needle in isa:
         res = map_program(prog, needle, max_results=max_per_needle)
@@ -65,10 +69,12 @@ def _candidates(prog: Program, isa: list[Program],
     return cands
 
 
-def select_instructions(prog: Program, isa: list[Program],
-                        allow_transforms: bool = True,
-                        approach=None) -> Selection:
-    """Cover ``prog``'s statements with ISA instructions.
+def select_from_candidates(prog: Program, cands: list[SelectedInstr],
+                           isa: list[Program],
+                           allow_transforms: bool = True,
+                           approach=None) -> Selection:
+    """The selection stage: cover ``prog`` from pre-computed mapping
+    candidates (the ``Select`` pass of the compilation pipeline).
 
     If a high-value needle (one covering multi-statement windows, e.g. the
     MXU matmul) has no direct mapping and ``allow_transforms`` is set, the
@@ -76,7 +82,6 @@ def select_instructions(prog: Program, isa: list[Program],
     selections are compared by (completeness, total calls, #instructions) —
     the paper's minimum-instruction heuristic extended across transform paths.
     """
-    cands = _candidates(prog, isa)
     chosen, covered = _greedy_cover(prog, cands, approach)
     uncovered = tuple(i for i in range(len(prog.statements)) if i not in covered)
     best = Selection(prog, (), chosen, uncovered)
@@ -102,6 +107,16 @@ def select_instructions(prog: Program, isa: list[Program],
             if quality(sel2) < quality(best):
                 best = sel2
     return best
+
+
+def select_instructions(prog: Program, isa: list[Program],
+                        allow_transforms: bool = True,
+                        approach=None) -> Selection:
+    """Map + select in one call (the historical entry point): compute the
+    mapping candidates, then cover the program with them."""
+    return select_from_candidates(prog, candidate_instructions(prog, isa),
+                                  isa, allow_transforms=allow_transforms,
+                                  approach=approach)
 
 
 def _greedy_cover(prog: Program, cands: list[SelectedInstr], approach=None):

@@ -27,11 +27,10 @@ from dataclasses import dataclass, field, replace
 import numpy as np
 
 from .approach import Approach, GreedyApproach
+from .dtypes import DTYPE_BYTES  # noqa: F401  (re-exported; one shared table)
 from .ir import Program
 from .isel import SelectedInstr, Selection
 from .sysgraph import ComputeNode, MoveEdge, SystemGraph
-
-DTYPE_BYTES = {"f32": 4, "f64": 8, "bf16": 2, "i32": 4}
 
 # --------------------------------------------------------------------------- #
 # Regions and tiles

@@ -34,12 +34,14 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from ..compile import compile_selection, select_program
 from ..core import instructions as I
 from ..core import kernels_ir as K
+from ..core.dtypes import dtype_bytes
 from ..core.executor import Machine
 from ..core.ir import Program, interpret, random_inputs
-from ..core.isel import Selection, select_instructions
-from ..core.scheduler import Schedule, schedule
+from ..core.isel import Selection
+from ..core.scheduler import Schedule
 from ..core.sysgraph import SystemGraph
 
 GEMM_AXES = ("m", "n", "k")
@@ -76,9 +78,8 @@ class CollectiveSpec:
 
     def chunk_nbytes(self, base: Program) -> list[int]:
         """Bytes of each chunk, from the global buffer's shape/dtype."""
-        from ..core.scheduler import DTYPE_BYTES
         buf = base.buffer(self.buffer)
-        per_unit = DTYPE_BYTES.get(buf.dtype, 4)
+        per_unit = dtype_bytes(buf.dtype)
         for d, s in enumerate(buf.shape):
             if d != self.axis:
                 per_unit *= s
@@ -110,7 +111,8 @@ class PartitionedProgram:
         return self.base.outputs[0]
 
     def shard_selection(self, shard: Shard) -> Selection:
-        """Instruction selection for one shard (memoized per shape)."""
+        """Instruction selection for one shard, through the ``repro.compile``
+        Map/Select passes (memoized per shape)."""
         key = shard.program.signature()
         memo = getattr(self, "_sel_memo", None)
         if memo is None:
@@ -118,10 +120,10 @@ class PartitionedProgram:
             self._sel_memo = memo
         if key not in memo:
             if self.kernel == "gemm":
-                memo[key] = select_instructions(
+                memo[key] = select_program(
                     shard.program, [I.mxu_matmul()], allow_transforms=False)
             else:
-                memo[key] = select_instructions(shard.program, I.tpu_isa())
+                memo[key] = select_program(shard.program, I.tpu_isa())
         return memo[key]
 
 
@@ -259,7 +261,7 @@ def replay_sharded(pp: PartitionedProgram, graph: SystemGraph,
                     if name != out_name and name in ins}
             sins[out_name] = running
             sel = pp.shard_selection(shard)
-            sched = schedule(sel, graph, approach)
+            sched = compile_selection(sel, graph, approach).schedule
             running = _execute_f64(sched, sel, sins)[out_name]
         final = running
     else:
@@ -268,7 +270,7 @@ def replay_sharded(pp: PartitionedProgram, graph: SystemGraph,
             sins = {name: np.asarray(ins[name], np.float64)[sl]
                     for name, sl in shard.slices.items() if name in ins}
             sel = pp.shard_selection(shard)
-            sched = schedule(sel, graph, approach)
+            sched = compile_selection(sel, graph, approach).schedule
             parts.append(_execute_f64(sched, sel, sins)[out_name])
         final = np.concatenate(parts, axis=pp.out_axis)
     return final.astype(oracle.dtype), oracle

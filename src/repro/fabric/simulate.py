@@ -34,7 +34,8 @@ import json
 import sys
 from dataclasses import dataclass
 
-from ..core.scheduler import Region, Schedule, ScheduleError, compute_time, schedule
+from ..compile import CompileError, compile_selection
+from ..core.scheduler import Region, Schedule, ScheduleError, compute_time
 from ..core.sysgraph import SystemGraph
 from ..search.space import Config, ParamApproach
 from .collectives import (ALGORITHMS, CollectiveStep, lower_all_gather,
@@ -325,7 +326,9 @@ def simulate_partition(pp: PartitionedProgram, topo: Topology,
                 app = _StaggeredUnroll(approach or GreedyApproach(),
                                        shard.chip, topo.n_chips,
                                        stagger_spec.chunks, stagger_spec.axis)
-            scheds[key] = schedule(pp.shard_selection(shard), chip_graph, app)
+            # per-chip compile through the repro.compile driver
+            scheds[key] = compile_selection(pp.shard_selection(shard),
+                                            chip_graph, app).schedule
 
     sim = EventSim()
 
@@ -417,12 +420,12 @@ def simulate_partition(pp: PartitionedProgram, topo: Topology,
 def single_chip_makespan(pp: PartitionedProgram,
                          chip_graph: SystemGraph | None = None,
                          approach=None) -> float:
-    """The 1-chip reference: the full program statically scheduled on one
-    chip — the exact ``scheduler.cost_model()`` number."""
+    """The 1-chip reference: the full program compiled through the driver on
+    one chip — the exact ``scheduler.cost_model()`` number."""
     chip_graph = chip_graph or Topology.chip_graph()
     one = partition(pp.kernel, _shape_of(pp), partition_axes(pp.kernel)[0], 1)
     sel = one.shard_selection(one.shards[0])
-    return schedule(sel, chip_graph, approach).makespan
+    return compile_selection(sel, chip_graph, approach).cost
 
 
 def _shape_of(pp: PartitionedProgram) -> tuple[int, ...]:
@@ -509,7 +512,7 @@ class FabricEvaluator:
                     return float("inf")
             return simulate_partition(pp, self.topo, approach, algorithm,
                                       self.chip_graph).makespan
-        except (ScheduleError, ValueError):
+        except (CompileError, ScheduleError, ValueError):
             return float("inf")
 
 

@@ -49,10 +49,10 @@ def tuned_block(m: int, n: int, k: int,
     process picks the winning BlockSpec up here — keyed by program
     fingerprint, system graph, backend, and jax version.
     """
+    from ..search.cache import CACHE_ERRORS, clamp_tile, lookup_gemm
     try:
-        from ..search.cache import clamp_tile, lookup_gemm
         rec = lookup_gemm(m, n, k)
-    except Exception:
+    except CACHE_ERRORS:
         rec = None
     if rec is not None and rec.tile:
         return clamp_tile(rec.tile, m, n, k)

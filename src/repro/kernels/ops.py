@@ -1,22 +1,19 @@
 """Jit'd wrappers + the ISAM -> Pallas bridge.
 
-``scheduled_gemm`` is the end-to-end TPU story: the ISAM pipeline (map ->
-select -> schedule against the v5e system graph) decides the compute-tile
-shape, and that decision becomes the Pallas BlockSpec tiling.  The compiler
-output *is* the kernel configuration — no hand-written lowering rule.
+``scheduled_gemm`` is the end-to-end TPU story: the compilation driver
+(``repro.compile``: map -> select -> schedule -> lower against the v5e
+system graph) decides the compute-tile shape, and that decision becomes the
+Pallas BlockSpec tiling.  The compiler output *is* the kernel configuration
+— no hand-written lowering rule.  ``plan_gemm`` / ``plan_gru`` are thin
+wrappers over ``compile_gemm`` / ``compile_gru``; tiles come from the
+``CompiledKernel``'s role-keyed tile plan (derived from each mapping's
+``axis_map``), never from guessed haystack axis names.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 
-from ..core import instructions as I
-from ..core import kernels_ir as K
-from ..core.approach import Approach, GreedyApproach
-from ..core.isel import select_instructions
-from ..core.scheduler import Schedule, schedule
-from ..core.sysgraph import SystemGraph, tpu_v5e
+from ..compile import CompileError, compile_gemm, compile_gru
 from . import gemm as gemm_kernel
 from . import gru as gru_kernel
 from .gemm import gemm, gemm_bias_act, tuned_block
@@ -25,53 +22,48 @@ from .gru import gru_cell, gru_seq
 
 def plan_gemm(m: int, n: int, k: int, approach: str = "greedy",
               use_cache: bool = True) -> tuple[tuple[int, int, int], float]:
-    """Run the ISAM pipeline on an (m, n, k) GEMM against the v5e graph;
-    return (chosen tile (bm, bn, bk), modeled seconds).
+    """Compile an (m, n, k) GEMM against the v5e graph through
+    ``repro.compile``; return (chosen tile (bm, bn, bk), modeled seconds).
 
     With ``use_cache`` (default), a winning config from the persistent
     tuning cache (``repro.search``) short-circuits planning entirely — the
     tuned tile and its modeled cost are returned as recorded.  The lookup
-    happens on every call (only the pure planning below is memoized), so
+    happens on every call (only the compile itself is memoized), so
     activating a cache mid-process takes effect immediately."""
     if use_cache:
+        from ..search.cache import (CACHE_ERRORS, clamp_tile, lookup_gemm)
         try:
-            from ..search.cache import clamp_tile, lookup_gemm
             rec = lookup_gemm(m, n, k)
-        except Exception:
+        except CACHE_ERRORS:
             rec = None
         if rec is not None and rec.tile:
             return clamp_tile(rec.tile, m, n, k), rec.cost
-    return _plan_gemm_uncached(m, n, k, approach)
+    art = compile_gemm(m, n, k, approach=approach, use_cache=use_cache)
+    return art.gemm_tile(), art.cost
 
 
-@functools.lru_cache(maxsize=256)
-def _plan_gemm_uncached(m: int, n: int, k: int,
-                        approach: str) -> tuple[tuple[int, int, int], float]:
-    prog = K.matmul(m, n, k)
-    sel = select_instructions(prog, [I.mxu_matmul()], allow_transforms=False)
-    app: Approach = GreedyApproach()
-    if approach == "costmodel":
-        from ..core.approach import CostModelApproach
-        app = CostModelApproach(samples=4)
-    sched = schedule(sel, tpu_v5e(1), app)
-    tile = _tile_from_schedule(sched)
-    return tile, sched.makespan
-
-
-def _tile_from_schedule(sched: Schedule) -> tuple[int, int, int]:
-    """Extract the (bm, bn, bk) compute-tile shape the scheduler settled on."""
-    for op in sched.ops:
-        if op.kind != "compute":
+def plan_gru(batch: int, hidden: int, inp: int | None = None,
+             approach: str = "greedy",
+             use_cache: bool = True) -> tuple[tuple[int, int], float]:
+    """Compile the GRU cell through ``repro.compile``; return the (bb, bh)
+    batch/hidden tile of its matmul stage + the modeled seconds.  Raises
+    ``CompileError`` if no matmul-shaped instruction was selected."""
+    art = compile_gru(batch, hidden, inp, approach=approach,
+                      use_cache=use_cache)
+    for prefix in ("fused.matmul", "mxu.matmul"):
+        try:
+            plan = art.instr_plan(prefix)
+            return (plan.tile_for("i"), plan.tile_for("j")), art.cost
+        except CompileError:
             continue
-        sizes = op.tile.sizes
-        # haystack axes are named i/j/k for K.matmul programs
-        return (sizes.get("i", 128), sizes.get("j", 128), sizes.get("k", 128))
-    raise ValueError("schedule contains no compute tiles")
+    raise CompileError(
+        f"GRU selection contains no matmul-shaped instruction "
+        f"(have: {[p.needle for p in art.instrs]})")
 
 
 def scheduled_gemm(a: jax.Array, b: jax.Array,
                    interpret: bool | None = None) -> jax.Array:
-    """GEMM whose BlockSpec tiling was chosen by the ISAM scheduler."""
+    """GEMM whose BlockSpec tiling was chosen by the compilation driver."""
     m, k = a.shape
     _, n = b.shape
     tile, _ = plan_gemm(m, n, k)
@@ -80,5 +72,5 @@ def scheduled_gemm(a: jax.Array, b: jax.Array,
 
 __all__ = [
     "gemm", "gemm_bias_act", "gru_cell", "gru_seq",
-    "plan_gemm", "scheduled_gemm", "tuned_block",
+    "plan_gemm", "plan_gru", "scheduled_gemm", "tuned_block",
 ]

@@ -61,6 +61,33 @@ def build_trainer(cfg: ModelConfig, opt_cfg: AdamWConfig, mesh,
     return model, init_state, step, (p_sh, o_sh)
 
 
+def activate_caches(tuning_path=None, compile_path=None, tag="tuned"):
+    """--tuned: point the process at the persistent tuning cache *and* the
+    ``repro.compile`` artifact cache, so every cache-aware entry point
+    (``tuned_block``/``plan_gemm``/``compile_gemm``...) reuses recorded
+    winners and compiled artifacts.  Shared by train and serve."""
+    from ..compile.cache import ArtifactCache, set_default_artifact_cache
+    from ..search.cache import TuningCache, set_default_cache
+    cache = TuningCache(tuning_path)
+    set_default_cache(cache)
+    print(f"[{tag}] tuning cache {cache.path}: {len(cache)} entries")
+    for key in sorted(cache.keys()):
+        rec = cache.lookup(key)
+        print(f"[{tag}]   {rec.meta.get('case', key)}: "
+              f"{rec.speedup:.2f}x ({rec.backend}/{rec.strategy})")
+    acache = ArtifactCache(compile_path)
+    set_default_artifact_cache(acache)
+    print(f"[{tag}] compile artifact cache {acache.path}: "
+          f"{len(acache)} artifact(s)")
+    for key in sorted(acache.keys()):
+        art = acache.lookup(key)
+        if art is not None:
+            print(f"[{tag}]   {art.program_name} on {art.graph_name}: "
+                  f"cost={art.cost:.3e}s "
+                  f"lowering={art.lowering.get('kind', '-')}")
+    return cache, acache
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default="olmo-1b")
@@ -86,17 +113,13 @@ def main(argv=None):
     ap.add_argument("--tuning-cache", default=None, metavar="PATH",
                     help="tuning cache path (with --tuned; default: the "
                          "repro.search default cache)")
+    ap.add_argument("--compile-cache", default=None, metavar="PATH",
+                    help="CompiledKernel artifact cache path (with --tuned; "
+                         "default: the repro.compile default cache)")
     args = ap.parse_args(argv)
 
     if args.tuned:
-        from ..search.cache import TuningCache, set_default_cache
-        cache = TuningCache(args.tuning_cache)
-        set_default_cache(cache)
-        print(f"[tuned] tuning cache {cache.path}: {len(cache)} entries")
-        for key in sorted(cache.keys()):
-            rec = cache.lookup(key)
-            print(f"[tuned]   {rec.meta.get('case', key)}: "
-                  f"{rec.speedup:.2f}x ({rec.backend}/{rec.strategy})")
+        activate_caches(args.tuning_cache, args.compile_cache)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),

@@ -7,14 +7,16 @@ is what makes search pay off across runs: ``kernels/gemm.py`` and the
 benchmarks consult it at run time, so a shape tuned once keeps its schedule
 until the toolchain (jax version) or machine description changes.
 
-Writes are atomic (tmp + rename) and reads are tolerant: a corrupt or
-missing file is an empty cache, never an error.
+Writes are atomic (tmp + rename) and reads are tolerant: a missing file is
+an empty cache; a *corrupt* file is an empty cache too, but warns once per
+path so a damaged cache never degrades performance silently.
 """
 from __future__ import annotations
 
 import json
 import os
 import tempfile
+import warnings
 from dataclasses import dataclass, field
 from functools import lru_cache
 
@@ -22,6 +24,24 @@ SCHEMA_VERSION = 1
 
 #: Override the default cache location (e.g. in CI).
 CACHE_ENV_VAR = "REPRO_TUNING_CACHE"
+
+#: The error types a persistent-cache lookup can legitimately raise — what
+#: cache-consulting call sites (``kernels.ops.plan_gemm``,
+#: ``kernels.gemm.tuned_block``) catch instead of a bare ``Exception``.
+#: Shared with the ``repro.compile`` artifact cache.
+CACHE_ERRORS = (OSError, ValueError, KeyError, TypeError)
+
+_warned_corrupt: set[str] = set()
+
+
+def warn_corrupt_cache(path: str, err: Exception) -> None:
+    """Warn exactly once per path about an unreadable cache file (the
+    tuning cache and the ``repro.compile`` artifact cache both degrade a
+    corrupt file to an empty cache, but never silently)."""
+    if path in _warned_corrupt:
+        return
+    _warned_corrupt.add(path)
+    warnings.warn(f"ignoring corrupt cache file {path}: {err}", stacklevel=3)
 
 
 def default_cache_path() -> str:
@@ -83,17 +103,21 @@ class TuningCache:
     def load(self) -> dict[str, TuningRecord]:
         if self._entries is None:
             entries: dict[str, TuningRecord] = {}
+            raw = None
             try:
                 with open(self.path) as f:
                     raw = json.load(f)
+            except OSError:
+                pass                        # missing file = empty cache
+            except ValueError as e:         # json.JSONDecodeError
+                warn_corrupt_cache(self.path, e)
+            if isinstance(raw, dict):
                 for d in raw.get("records", []):
                     try:
                         rec = TuningRecord.from_dict(d)
                         entries[rec.key] = rec
                     except (KeyError, TypeError, ValueError):
                         continue            # skip malformed record
-            except (OSError, json.JSONDecodeError):
-                pass                        # missing/corrupt file = empty
             self._entries = entries
         return self._entries
 

@@ -2,11 +2,12 @@
 
 Two ways to score a config vector:
 
-  * ``CostModelEvaluator`` — the fast path: re-run the static scheduler's
-    dry-run with the candidate ParamApproach and score its modeled makespan
-    (``scheduler.cost_model()``).  A cheap tile-count pre-check rejects
-    degenerate configs (tiny tiles on huge extents explode the simulated
-    stream) with ``inf`` instead of minutes of scheduling.
+  * ``CostModelEvaluator`` — the fast path: compile the candidate
+    ParamApproach through the ``repro.compile`` driver (Schedule + Lower on
+    the fixed Selection) and score the resulting ``CompiledKernel``'s
+    modeled makespan.  A cheap tile-count pre-check rejects degenerate
+    configs (tiny tiles on huge extents explode the simulated stream) with
+    ``inf`` instead of minutes of scheduling.
 
   * ``MeasuredGemmEvaluator`` — optional wall-clock: forward the candidate's
     tile choice as the Pallas GEMM BlockSpec (``kernels/gemm.py``) and time
@@ -28,12 +29,13 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from ..compile import CompiledKernel, CompileError, compile_selection
 from ..core.approach import Approach
 from ..core.executor import execute
 from ..core.instructions import is_elementwise
 from ..core.ir import Program, interpret, random_inputs
 from ..core.isel import Selection
-from ..core.scheduler import Schedule, ScheduleError, schedule
+from ..core.scheduler import Schedule
 from ..core.sysgraph import SystemGraph
 from .space import Config, ParamApproach
 
@@ -44,7 +46,7 @@ from .space import Config, ParamApproach
 
 
 class CostModelEvaluator:
-    """Score a config by the static scheduler's modeled makespan."""
+    """Score a config by the modeled makespan of its ``CompiledKernel``."""
 
     def __init__(self, selection: Selection, graph: SystemGraph,
                  max_tiles: int = 4096):
@@ -77,16 +79,21 @@ class CostModelEvaluator:
             total += mapped * calls
         return total
 
+    def compile(self, config: Config) -> CompiledKernel:
+        """The candidate's ``CompiledKernel`` (Schedule + Lower through the
+        ``repro.compile`` driver on this evaluator's fixed Selection)."""
+        return compile_selection(self.sel, self.graph, ParamApproach(config))
+
     def schedule_config(self, config: Config) -> Schedule:
-        return schedule(self.sel, self.graph, ParamApproach(config))
+        return self.compile(config).schedule
 
     def __call__(self, config: Config) -> float:
         approach = ParamApproach(config)
         if self.estimated_tiles(approach) > self.max_tiles:
             return float("inf")
         try:
-            return schedule(self.sel, self.graph, approach).makespan
-        except ScheduleError:
+            return self.compile(config).cost
+        except CompileError:
             return float("inf")
 
 
@@ -185,11 +192,12 @@ class ValidationReport:
 def validate_selection(prog: Program, selection: Selection,
                        graph: SystemGraph, approach: Approach,
                        rng_seed: int = 0) -> ValidationReport:
-    """Schedule ``selection`` with ``approach``, execute the recorded stream
-    with real data (core.executor) and compare against ``ir.interpret`` on
-    the *original* program ``prog`` (transform steps adapted)."""
-    sched = schedule(selection, graph, approach)
-    return validate_schedule(prog, selection, sched, rng_seed=rng_seed)
+    """Compile ``selection`` with ``approach`` through the driver, execute
+    the recorded stream with real data (core.executor) and compare against
+    ``ir.interpret`` on the *original* program ``prog`` (transform steps
+    adapted)."""
+    art = compile_selection(selection, graph, approach, program=prog)
+    return validate_schedule(prog, selection, art.schedule, rng_seed=rng_seed)
 
 
 def validate_schedule(prog: Program, selection: Selection, sched: Schedule,

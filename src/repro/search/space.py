@@ -18,6 +18,7 @@ system graph's node/edge structure rather than relying on names alone.
 """
 from __future__ import annotations
 
+import functools
 import hashlib
 import random
 from dataclasses import dataclass
@@ -204,9 +205,12 @@ def _short_hash(text: str) -> str:
     return hashlib.sha256(text.encode()).hexdigest()[:16]
 
 
+@functools.lru_cache(maxsize=512)
 def program_fingerprint(prog: Program) -> str:
     """Stable structural hash of a haystack program (axes, buffers, access
-    matrices) — survives renaming-free rebuilds across processes."""
+    matrices) — survives renaming-free rebuilds across processes.  Cached
+    (Program is frozen/hashable): artifact keying sits on the evaluator hot
+    path and re-fingerprints the same program every trial."""
     return _short_hash(prog.signature())
 
 
@@ -225,8 +229,12 @@ def sysgraph_fingerprint(graph: SystemGraph) -> str:
     return _short_hash(";".join(parts))
 
 
+@functools.lru_cache(maxsize=1)
 def jax_version() -> str:
-    """jax version without importing jax (keeps core/search numpy-only)."""
+    """jax version without importing jax (keeps core/search numpy-only).
+    Cached: the metadata scan costs milliseconds and the result is a
+    process-constant, while ``tuning_key``/``artifact_key`` sit on the
+    evaluator hot path."""
     try:
         from importlib.metadata import version
         return version("jax")

@@ -36,10 +36,9 @@ import sys
 import time
 from dataclasses import dataclass, field
 
-from ..core import instructions as I
-from ..core import kernels_ir as K
+from ..compile import conv_selection, gemm_selection, gru_selection
 from ..core.ir import Program
-from ..core.isel import Selection, select_instructions
+from ..core.isel import Selection
 from ..core.sysgraph import SystemGraph, paper_accelerator, tpu_v5e
 from .cache import TuningCache, TuningRecord, default_cache_path
 from .evaluate import (CostModelEvaluator, MeasuredGemmEvaluator,
@@ -94,41 +93,29 @@ class TuneCase:
 
 
 def _gemm_case(m: int, n: int, k: int) -> TuneCase:
-    prog = K.matmul(m, n, k)
-    sel = select_instructions(prog, [I.mxu_matmul()], allow_transforms=False)
-    pm, pn, pk = (min(m, VALIDATE_DIM_CAP), min(n, VALIDATE_DIM_CAP),
-                  min(k, VALIDATE_DIM_CAP))
-    proxy = K.matmul(pm, pn, pk)
-    psel = select_instructions(proxy, [I.mxu_matmul()],
-                               allow_transforms=False)
+    prog, sel = gemm_selection(m, n, k)
+    proxy, psel = gemm_selection(min(m, VALIDATE_DIM_CAP),
+                                 min(n, VALIDATE_DIM_CAP),
+                                 min(k, VALIDATE_DIM_CAP))
     return TuneCase(f"gemm_{m}x{n}x{k}", prog, sel, prog, proxy, psel,
                     gemm_shape=(m, n, k))
 
 
 def _gru_case(batch: int, hidden: int) -> TuneCase:
-    isa = I.tpu_isa()
-    prog = K.gru_cell(batch, hidden, hidden)
-    sel = select_instructions(prog, isa)
-    proxy = K.gru_cell(min(batch, 4), min(hidden, 16), min(hidden, 16))
-    psel = select_instructions(proxy, isa)
+    prog, sel = gru_selection(batch, hidden)
+    proxy, psel = gru_selection(min(batch, 4), min(hidden, 16))
     return TuneCase(f"gru_{batch}x{hidden}", prog, sel, prog, proxy, psel)
 
 
 def _conv_case(name: str, kw: dict) -> TuneCase:
-    from ..core.transforms import fuse_axes_for_calls
-    isa = [I.mxu_matmul()]
-    orig = K.conv2d(**kw)
-    prog, sel, steps = fuse_axes_for_calls(orig, isa)
-    sel = Selection(sel.program, tuple(steps), sel.instrs, sel.uncovered)
+    orig, sel = conv_selection(**kw)
     pkw = dict(kw, batch=min(kw["batch"], 2), h=min(kw["h"], 6),
                w=min(kw["w"], 6), cin=min(kw["cin"], 8),
                cout=min(kw["cout"], 8))
-    porig = K.conv2d(**pkw)
-    pprog, psel, psteps = fuse_axes_for_calls(porig, isa)
-    psel = Selection(psel.program, tuple(psteps), psel.instrs, psel.uncovered)
+    porig, psel = conv_selection(**pkw)
     return TuneCase(f"{name}_{kw['batch']}x{kw['h']}x{kw['w']}"
                     f"x{kw['cin']}x{kw['cout']}",
-                    prog, sel, orig, porig, psel)
+                    sel.program, sel, orig, porig, psel)
 
 
 def build_cases(suite: str, limit: int | None = None) -> list[TuneCase]:
