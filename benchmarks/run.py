@@ -1,10 +1,24 @@
 """Benchmark harness — one suite per paper table/figure (+ the roofline).
 
-    PYTHONPATH=src python -m benchmarks.run [--only <suite>] [--json <path>]
+    PYTHONPATH=src python -m benchmarks.run [--only <suite>[,<suite>...]]
+        [--json <path>] [--baseline <path> --tolerance <pct>]
 
 Prints ``name,us_per_call,derived`` CSV; ``--json`` additionally writes the
 rows (plus per-suite errors) as machine-readable JSON so the perf trajectory
 is comparable across PRs (e.g. ``BENCH_mapper.json``).
+
+``--baseline`` turns the run into a **perf-regression gate**: every row of
+the baseline JSON must reappear (matched by suite + name) with
+``us_per_call`` no more than ``--tolerance`` percent above the recorded
+value.  Missing rows and regressions fail the run (exit 1) with one line per
+violation; new rows not in the baseline are reported but pass — they become
+part of the baseline when it is next regenerated.  CI gates the
+deterministic modeled-cost suites (``tuned``, ``fabric``) against the
+committed ``benchmarks/baselines/BENCH_ci.json``; see README for how to
+update it.
+
+A suite that yields **zero rows** is an error (exit 1), not a pass — the
+gate must never go green on vacuous output.
 """
 from __future__ import annotations
 
@@ -40,22 +54,82 @@ def _epilog() -> str:
     return "\n".join(lines)
 
 
+def compare_to_baseline(records: list[dict], baseline: dict,
+                        tolerance_pct: float,
+                        out=sys.stderr) -> list[str]:
+    """Violations of ``records`` against a previously written ``--json``
+    payload: baseline rows that disappeared or got slower than the
+    tolerance.  Baseline rows that recorded an error (us_per_call < 0)
+    gate nothing — a fixed suite reports real rows under real names, so
+    the synthetic error row would otherwise read as "missing" forever."""
+    got = {}
+    for r in records:
+        got[(r.get("suite"), r.get("name"))] = r
+    violations = []
+    tol = 1.0 + tolerance_pct / 100.0
+    for b in baseline.get("rows", []):
+        key = (b.get("suite"), b.get("name"))
+        base_us = float(b.get("us_per_call", -1.0))
+        if base_us < 0:
+            continue    # baseline recorded an error for this row: nothing
+            # to gate — a later run that fixed the suite reports real rows
+            # under real names, so the synthetic error key never matches
+        row = got.get(key)
+        if row is None:
+            violations.append(f"{key[0]}/{key[1]}: row missing "
+                              f"(baseline {base_us:.2f}us)")
+            continue
+        new_us = float(row.get("us_per_call", -1.0))
+        if new_us < 0:
+            violations.append(f"{key[0]}/{key[1]}: now errors "
+                              f"({row.get('error', 'unknown')}), baseline "
+                              f"{base_us:.2f}us")
+        elif new_us > base_us * tol:
+            violations.append(
+                f"{key[0]}/{key[1]}: {new_us:.2f}us exceeds baseline "
+                f"{base_us:.2f}us by {(new_us / base_us - 1) * 100:.1f}% "
+                f"(tolerance {tolerance_pct:.1f}%)")
+    baseline_keys = {(b.get("suite"), b.get("name"))
+                     for b in baseline.get("rows", [])}
+    new_rows = [k for k in got if k not in baseline_keys]
+    if new_rows:
+        print(f"# {len(new_rows)} row(s) not in baseline (pass; regenerate "
+              "the baseline to gate them)", file=out)
+    return violations
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
         formatter_class=argparse.RawDescriptionHelpFormatter,
         epilog=_epilog())
-    ap.add_argument("--only", default=None, metavar="SUITE",
-                    help="run a single suite (see list below)")
+    ap.add_argument("--only", default=None, metavar="SUITE[,SUITE...]",
+                    help="run selected suites (comma-separated; see list "
+                         "below)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write results as JSON (machine-readable "
                          "perf trajectory)")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="compare against a previous --json payload and "
+                         "fail on regressions (the CI perf gate)")
+    ap.add_argument("--tolerance", type=float, default=5.0, metavar="PCT",
+                    help="allowed us_per_call increase over the baseline, "
+                         "in percent (default 5)")
     args = ap.parse_args()
 
-    if args.only and args.only not in SUITES:
-        print(f"unknown suite {args.only!r}; available: "
-              f"{', '.join(sorted(SUITES))}", file=sys.stderr)
-        raise SystemExit(2)
-    selected = {args.only: SUITES[args.only]} if args.only else SUITES
+    if args.only:
+        names = [s.strip() for s in args.only.split(",") if s.strip()]
+        if not names:
+            print(f"--only {args.only!r} selects no suites; available: "
+                  f"{', '.join(sorted(SUITES))}", file=sys.stderr)
+            raise SystemExit(2)
+        unknown = [s for s in names if s not in SUITES]
+        if unknown:
+            print(f"unknown suite(s) {', '.join(map(repr, unknown))}; "
+                  f"available: {', '.join(sorted(SUITES))}", file=sys.stderr)
+            raise SystemExit(2)
+        selected = {name: SUITES[name] for name in names}
+    else:
+        selected = dict(SUITES)
 
     import importlib
     suites = {name: importlib.import_module(f".{mod}", package=__package__)
@@ -65,8 +139,10 @@ def main() -> None:
     records: list[dict] = []
     failures = 0
     for name, module in suites.items():
+        n_rows = 0
         try:
             for row_name, us, derived in module.run():
+                n_rows += 1
                 print(f"{row_name},{us:.2f},{derived}", flush=True)
                 records.append({"suite": name, "name": row_name,
                                 "us_per_call": us, "derived": derived})
@@ -76,11 +152,36 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
             records.append({"suite": name, "name": name, "us_per_call": -1.0,
                             "error": f"{type(e).__name__}: {e}"})
+            continue
+        if n_rows == 0:
+            # An empty sweep must not "pass" — a gate comparing nothing
+            # against nothing would green on a broken suite.
+            failures += 1
+            print(f"suite {name!r} emitted no rows — failing "
+                  "(empty sweeps don't pass)", file=sys.stderr)
+            records.append({"suite": name, "name": name, "us_per_call": -1.0,
+                            "error": "suite emitted no rows"})
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"schema": 1, "failures": failures, "rows": records},
                       f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
+    if args.baseline:
+        try:
+            with open(args.baseline) as f:
+                baseline = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"cannot read baseline {args.baseline}: {e}",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        violations = compare_to_baseline(records, baseline, args.tolerance)
+        for v in violations:
+            print(f"PERF REGRESSION: {v}", file=sys.stderr)
+        if violations:
+            raise SystemExit(1)
+        print(f"# perf gate: {len(baseline.get('rows', []))} baseline "
+              f"row(s) within {args.tolerance:.1f}% tolerance",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

@@ -17,7 +17,11 @@ passes → backend story, VTA/DL-compiler-survey style):
   * ``driver``    — ``compile_program`` / ``compile_gemm`` / ``compile_gru``
                     / ``compile_conv`` / ``compile_selection`` /
                     ``compile_fabric`` and the workload frontends shared by
-                    ``repro.kernels``, ``repro.search`` and ``repro.fabric``.
+                    ``repro.kernels``, ``repro.search`` and ``repro.fabric``;
+  * ``features``  — engineered feature vectors over (config, program,
+                    graph) triples + ``CompiledKernel`` descriptors, the
+                    input representation of the learned cost model
+                    (``repro.search.model``).
 
 CLI: ``python -m repro.compile --kernel gemm --shape 1024x1024x1024``.
 """
@@ -28,15 +32,18 @@ from .driver import (compile_conv, compile_fabric, compile_gemm, compile_gru,
                      compile_program, compile_selection, conv_selection,
                      gemm_selection, gru_selection, resolve_approach,
                      select_program)
+from .features import (artifact_features, feature_dict, feature_names,
+                       feature_vector, program_family)
 from .pipeline import (CompileContext, LowerPass, MapPass, Pipeline,
                        SchedulePass, SelectPass)
 
 __all__ = [
     "ArtifactCache", "CompileContext", "CompiledKernel", "CompileError",
     "InstrPlan", "LowerPass", "MapPass", "Pipeline", "SchedulePass",
-    "SelectPass", "artifact_key", "compile_conv", "compile_fabric",
-    "compile_gemm", "compile_gru", "compile_program", "compile_selection",
-    "conv_selection", "default_artifact_cache_path", "gemm_selection",
-    "get_default_artifact_cache", "gru_selection", "resolve_approach",
-    "select_program", "set_default_artifact_cache",
+    "SelectPass", "artifact_features", "artifact_key", "compile_conv",
+    "compile_fabric", "compile_gemm", "compile_gru", "compile_program",
+    "compile_selection", "conv_selection", "default_artifact_cache_path",
+    "feature_dict", "feature_names", "feature_vector", "gemm_selection",
+    "get_default_artifact_cache", "gru_selection", "program_family",
+    "resolve_approach", "select_program", "set_default_artifact_cache",
 ]

@@ -85,6 +85,14 @@ class SystemGraph:
                                        rev_issuer or issuer))
 
     # -- queries --------------------------------------------------------------
+    def min_matmul_tile(self) -> tuple[int, int, int]:
+        """The smallest hardware matmul tile across compute nodes (lexico
+        min; all real graphs have uniform tiles).  The single definition
+        behind the search space's tile choices and the learned cost model's
+        tile features — they must agree on what "1x the hw tile" means."""
+        tiles = {c.matmul_tile for c in self.computes.values()}
+        return min(tiles) if tiles else (128, 128, 128)
+
     def edge(self, src: str, dst: str) -> MoveEdge:
         for e in self.edges:
             if e.src == src and e.dst == dst:

@@ -48,6 +48,12 @@ def tuned_block(m: int, n: int, k: int,
     Tune once (``python -m repro.search.tune --suite gemm``) and every later
     process picks the winning BlockSpec up here — keyed by program
     fingerprint, system graph, backend, and jax version.
+
+    Shapes that were *never* tuned ask the learned cost model next — when a
+    process-wide model store is active (``--tuned --tuning-model``,
+    ``repro.search.model.set_default_store``), the matmul-family ridge model
+    ranks the tile sub-space by predicted cost and its winner becomes the
+    BlockSpec.  No store / no model / any cache error keeps ``default``.
     """
     from ..search.cache import CACHE_ERRORS, clamp_tile, lookup_gemm
     try:
@@ -56,6 +62,13 @@ def tuned_block(m: int, n: int, k: int,
         rec = None
     if rec is not None and rec.tile:
         return clamp_tile(rec.tile, m, n, k)
+    try:
+        from ..search.model import predict_gemm_block
+        blk = predict_gemm_block(m, n, k)
+    except CACHE_ERRORS:
+        blk = None
+    if blk is not None:
+        return clamp_tile(blk, m, n, k)
     return default
 
 

@@ -62,11 +62,15 @@ def main(argv=None):
                     help="tuning cache path (with --tuned)")
     ap.add_argument("--compile-cache", default=None, metavar="PATH",
                     help="artifact cache path (with --tuned)")
+    ap.add_argument("--tuning-model", default=None, metavar="PATH",
+                    help="learned cost model store (with --tuned): untuned "
+                         "GEMM shapes get a model-predicted BlockSpec")
     args = ap.parse_args(argv)
 
     if args.tuned:
         from .train import activate_caches
-        activate_caches(args.tuning_cache, args.compile_cache, tag="serve")
+        activate_caches(args.tuning_cache, args.compile_cache, tag="serve",
+                        model_path=args.tuning_model)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)

@@ -92,46 +92,67 @@ class TuningRecord:
                    meta=dict(d.get("meta", {})))
 
 
-class TuningCache:
-    """Dict-of-records with JSON persistence."""
+class JsonStore:
+    """Shared keyed-JSON-artifact persistence — the one implementation of
+    lazy load with corrupt-file tolerance, merge-on-save, and atomic
+    replace behind both the tuning cache and the learned-cost-model store
+    (``repro.search.model.ModelStore``).
+
+    Subclasses set ``payload_key``/``schema`` and the entry codecs
+    (``_decode`` raising ``KeyError/TypeError/ValueError`` on malformed
+    entries, which are skipped).  Entries expose ``.key``.
+    """
+
+    payload_key = "records"
+    schema = SCHEMA_VERSION
 
     def __init__(self, path: str | None = None):
-        self.path = path or default_cache_path()
-        self._entries: dict[str, TuningRecord] | None = None
+        self.path = path or self.default_path()
+        self._entries: dict | None = None
+
+    def default_path(self) -> str:          # pragma: no cover - subclassed
+        raise NotImplementedError
+
+    def _decode(self, d: dict):             # pragma: no cover - subclassed
+        raise NotImplementedError
+
+    def _encode(self, obj) -> dict:
+        return obj.to_dict()
 
     # -- persistence ---------------------------------------------------------
-    def load(self) -> dict[str, TuningRecord]:
+    def load(self) -> dict:
         if self._entries is None:
-            entries: dict[str, TuningRecord] = {}
+            entries: dict = {}
             raw = None
             try:
                 with open(self.path) as f:
                     raw = json.load(f)
             except OSError:
-                pass                        # missing file = empty cache
+                pass                        # missing file = empty store
             except ValueError as e:         # json.JSONDecodeError
                 warn_corrupt_cache(self.path, e)
             if isinstance(raw, dict):
-                for d in raw.get("records", []):
+                for d in raw.get(self.payload_key, []):
                     try:
-                        rec = TuningRecord.from_dict(d)
-                        entries[rec.key] = rec
+                        obj = self._decode(d)
+                        entries[obj.key] = obj
                     except (KeyError, TypeError, ValueError):
-                        continue            # skip malformed record
+                        continue            # skip malformed entry
             self._entries = entries
         return self._entries
 
     def save(self) -> None:
-        # Merge-on-save: re-read the file so records another process stored
+        # Merge-on-save: re-read the file so entries another process stored
         # since our first load survive (last writer wins per *key*, not per
         # file).  Simultaneous writes still race, but os.replace keeps the
         # file valid and only the colliding keys can be lost.
         ours = dict(self.load())
-        entries = TuningCache(self.path).load()
+        entries = type(self)(self.path).load()
         entries.update(ours)
         self._entries = entries
-        payload = {"schema": SCHEMA_VERSION,
-                   "records": [r.to_dict() for r in entries.values()]}
+        payload = {"schema": self.schema,
+                   self.payload_key: [self._encode(o)
+                                      for o in entries.values()]}
         d = os.path.dirname(os.path.abspath(self.path))
         os.makedirs(d, exist_ok=True)
         fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -147,11 +168,11 @@ class TuningCache:
             raise
 
     # -- access ---------------------------------------------------------------
-    def lookup(self, key: str) -> TuningRecord | None:
+    def lookup(self, key: str):
         return self.load().get(key)
 
-    def store(self, record: TuningRecord, save: bool = True) -> None:
-        self.load()[record.key] = record
+    def store(self, obj, save: bool = True) -> None:
+        self.load()[obj.key] = obj
         if save:
             self.save()
 
@@ -163,6 +184,19 @@ class TuningCache:
 
     def __contains__(self, key: str) -> bool:
         return key in self.load()
+
+
+class TuningCache(JsonStore):
+    """Dict-of-``TuningRecord`` with JSON persistence."""
+
+    payload_key = "records"
+    schema = SCHEMA_VERSION
+
+    def default_path(self) -> str:
+        return default_cache_path()
+
+    def _decode(self, d: dict) -> TuningRecord:
+        return TuningRecord.from_dict(d)
 
 
 # --------------------------------------------------------------------------- #

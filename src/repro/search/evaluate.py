@@ -1,6 +1,6 @@
 """Candidate evaluation backends + oracle validation (paper Section 4).
 
-Two ways to score a config vector:
+Three ways to score a config vector:
 
   * ``CostModelEvaluator`` — the fast path: compile the candidate
     ParamApproach through the ``repro.compile`` driver (Schedule + Lower on
@@ -8,6 +8,11 @@ Two ways to score a config vector:
     modeled makespan.  A cheap tile-count pre-check rejects degenerate
     configs (tiny tiles on huge extents explode the simulated stream) with
     ``inf`` instead of minutes of scheduling.
+
+  * ``LearnedEvaluator`` — the *surrogate* path: score by the trained ridge
+    model of ``repro.search.model`` (microseconds per candidate, no
+    scheduling).  Used to rank large pools; real budgets still settle the
+    winner, so the tuned <= greedy contract never rests on a prediction.
 
   * ``MeasuredGemmEvaluator`` — optional wall-clock: forward the candidate's
     tile choice as the Pallas GEMM BlockSpec (``kernels/gemm.py``) and time
@@ -95,6 +100,79 @@ class CostModelEvaluator:
             return self.compile(config).cost
         except CompileError:
             return float("inf")
+
+
+class LearnedEvaluator:
+    """Score a config by the **learned** cost model's prediction — no
+    scheduling, no compile; microseconds per candidate.
+
+    This is the ranking half of surrogate-guided search: predictions order a
+    large pool, and the real trial budget (``CostModelEvaluator`` /
+    measured) is reserved for the top of that order.  The evaluator keeps
+    the analytical tile-count guard so degenerate configs stay ``inf`` —
+    the model never trains on infeasible points, so it has no basis to
+    reject them itself.
+
+    ``for_selection`` resolves the model from a ``ModelStore`` (default:
+    the process-wide store) and returns ``None`` when no model covers the
+    program's family on this graph — callers fall back to the cost backend.
+    """
+
+    def __init__(self, model, selection: Selection, graph: SystemGraph,
+                 max_tiles: int = 4096):
+        self.model = model
+        self.sel = selection
+        self.graph = graph
+        from ..compile.features import role_extents
+        self._guard = CostModelEvaluator(selection, graph,
+                                         max_tiles=max_tiles)
+        self._predict = model.predictor(selection.program, graph,
+                                        role_extents(selection))
+
+    @classmethod
+    def for_selection(cls, selection: Selection, graph: SystemGraph,
+                      store=None, backend: str = "cost"
+                      ) -> "LearnedEvaluator | None":
+        from .model import get_default_store
+        store = store if store is not None else get_default_store()
+        if store is None:
+            return None
+        model = store.model_for(selection.program, graph, backend)
+        if model is None:
+            return None
+        return cls(model, selection, graph)
+
+    @property
+    def predictor(self):
+        """The raw (unguarded) ``config -> predicted seconds`` closure with
+        ``predict_many`` — for diagnostics like ``model.topk_regret`` that
+        score pre-screened configs.  Rankings that *choose* what to spend
+        real budget on must go through the evaluator itself (``__call__`` /
+        ``predict_many``), which keeps the tile-count guard."""
+        return self._predict
+
+    @property
+    def anchors(self) -> list[Config]:
+        """The cache-winner configs the model was trained on (its program
+        family's "known good" set) — surrogate search seeds."""
+        return [dict(c) for c in self.model.meta.get("anchors", [])]
+
+    def _feasible(self, config: Config) -> bool:
+        return self._guard.estimated_tiles(ParamApproach(config)) \
+            <= self._guard.max_tiles
+
+    def predict_many(self, configs) -> list[float]:
+        """Guarded batch prediction: infeasible configs score ``inf`` so a
+        pool ranking can never put them in front of real-budget trials."""
+        configs = list(configs)
+        scores = self._predict.predict_many(configs)
+        return [float(s) if self._feasible(c) else float("inf")
+                for c, s in zip(configs, scores)]
+
+    def __call__(self, config: Config) -> float:
+        if not self._feasible(config):
+            return float("inf")
+        return self._predict(config)
 
 
 def gemm_tile_for(config: Config, graph: SystemGraph,

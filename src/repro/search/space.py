@@ -127,9 +127,7 @@ class SearchSpace:
 
     @classmethod
     def for_graph(cls, graph: SystemGraph) -> "SearchSpace":
-        tiles = {c.matmul_tile for c in graph.computes.values()}
-        hw = min(tiles) if tiles else (128, 128, 128)
-        return cls(hw)
+        return cls(graph.min_matmul_tile())
 
     @classmethod
     def for_fabric(cls, kernel: str = "gemm") -> "SearchSpace":
@@ -137,10 +135,8 @@ class SearchSpace:
         space for distributed tuning over v5e chips."""
         from ..fabric.partition import partition_axes
         from ..fabric.topology import Topology
-        graph = Topology.chip_graph()
-        tiles = {c.matmul_tile for c in graph.computes.values()}
-        hw = min(tiles) if tiles else (128, 128, 128)
-        return cls(hw, fabric_axes=partition_axes(kernel))
+        return cls(Topology.chip_graph().min_matmul_tile(),
+                   fabric_axes=partition_axes(kernel))
 
     # -- points --------------------------------------------------------------
     def baseline(self) -> Config:
@@ -186,6 +182,16 @@ class SearchSpace:
         for a in self.axes:
             n *= len(a.choices)
         return n
+
+    def enumerate_configs(self) -> Iterator[Config]:
+        """Every point of the space, in deterministic (axis-major) order —
+        what the surrogate strategy ranks when the space is small enough to
+        score exhaustively (a prediction costs microseconds, so even ~10^4
+        points are cheap to rank)."""
+        import itertools
+        names = [a.name for a in self.axes]
+        for values in itertools.product(*(a.choices for a in self.axes)):
+            yield dict(zip(names, values))
 
     def to_approach(self, config: Config) -> ParamApproach:
         return ParamApproach(config)

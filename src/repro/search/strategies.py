@@ -169,8 +169,127 @@ def evolutionary(space: SearchSpace, evaluate: Evaluator,
     return r.outcome("evolve")
 
 
+#: Above this size the surrogate ranks a seeded sample instead of the full
+#: enumeration (predictions are cheap, but not free).
+SURROGATE_POOL_CAP = 20_000
+
+
+def surrogate_search(space: SearchSpace, evaluate: Evaluator,
+                     trials: int = 32, seed: int = 0,
+                     predict: Callable[[Config], float] | None = None,
+                     seeds: list[Config] | None = None,
+                     pool: int = 4096) -> SearchOutcome:
+    """Surrogate-guided search: rank a large candidate pool by a *learned*
+    cost predictor (``repro.search.model``), then spend the real evaluation
+    budget only on the top of the ranking.
+
+    Budget split (all real evaluations go through the shared runner, so
+    baseline-first and tuned <= greedy hold exactly as for the other
+    strategies):
+
+      1. the greedy-equivalent baseline (1 trial);
+      1b. the ``seeds`` — a trained model carries the cache-winner configs
+         of its program *family* as anchors (``CostModel.meta['anchors']``),
+         so past winners for sibling shapes are tried first: the tuning
+         cache's "remember winners" transferred across shapes.  At most
+         half the budget, best-predicted first;
+      2. **model-ordered local search** (~2/3 of the remaining budget):
+         hill-climbing from the baseline, but each incumbent's
+         single-mutation neighborhood is walked in *predicted-cost order*
+         instead of the space's axis order — the same moves ``hill_climb``
+         makes, reached in fewer real evaluations because the model fronts
+         the promising mutations;
+      3. **global probes** (the rest): the best-predicted configs of the
+         whole space (enumerated when small, else a seeded sample), for
+         optima the local walk cannot reach — this is where the surrogate
+         pays off beyond accelerating hillclimb.
+
+    Without a predictor there is nothing to rank, so the call degrades to
+    ``hill_climb`` — the documented fallback when no model is trained.  The
+    predictor may expose ``predict_many(configs)`` (the
+    ``CostModel.predictor`` closure does) to score pools in one shot.
+    """
+    if predict is None:
+        out = hill_climb(space, evaluate, trials=trials, seed=seed)
+        out.strategy = "surrogate:fallback-hillclimb"
+        return out
+
+    rng = random.Random(seed)
+    r = _Runner(space, evaluate, trials)
+    r.run(space.baseline())
+
+    # -- phase 1b: family anchors (cache winners), best-predicted first ----
+    if seeds:
+        sseeds = [dict(s) for s in seeds]
+        s_scores = _predict_all(predict, sseeds)
+        seed_budget = 1 + max(1, (trials - 1) // 2)
+        for _, cand in sorted(zip(s_scores, sseeds), key=_rank_key):
+            if len(r.trials) >= min(seed_budget, r.budget):
+                break
+            r.run(cand)
+
+    # -- phase 2: model-ordered first-improvement local search -------------
+    global_budget = max(1, (trials - 1) // 3)
+    assert r.best is not None
+    current = r.best
+    frontier = _ordered_neighbors(space, predict, current.config, r.seen)
+    while len(r.trials) < r.budget - global_budget:
+        cand = next(frontier, None)
+        if cand is None:               # neighborhood exhausted: local optimum
+            break
+        t = r.run(cand)
+        if t is not None and t.cost < current.cost:
+            current = t                # first improvement: re-center
+            frontier = _ordered_neighbors(space, predict, current.config,
+                                          r.seen)
+
+    # -- phase 3: global top-predicted probes ------------------------------
+    if space.size() <= SURROGATE_POOL_CAP:
+        candidates = list(space.enumerate_configs())
+    else:                                   # pragma: no cover - huge spaces
+        candidates = list(space.neighbors(space.baseline()))
+        seen = {config_key(c) for c in candidates}
+        while len(candidates) < pool:
+            c = space.random_config(rng)
+            if config_key(c) not in seen:
+                seen.add(config_key(c))
+                candidates.append(c)
+    candidates = [c for c in candidates if config_key(c) not in r.seen]
+    scores = _predict_all(predict, candidates)
+    for _, cand in sorted(zip(scores, candidates), key=_rank_key):
+        if r.exhausted:
+            break
+        r.run(cand)
+    return r.outcome("surrogate")
+
+
+def _ordered_neighbors(space: SearchSpace, predict, config: Config,
+                       seen: set) -> "Iterator[Config]":
+    """The unseen single-mutation neighborhood of ``config``, best-predicted
+    first (deterministic ties — see ``_rank_key``)."""
+    neigh = [c for c in space.neighbors(config) if config_key(c) not in seen]
+    scores = _predict_all(predict, neigh)
+    return iter([c for _, c in sorted(zip(scores, neigh), key=_rank_key)])
+
+
+def _rank_key(sc):
+    """Deterministic (score, config) ordering: ties break on the config's
+    canonical *string* form — config values mix None/int/str, which are not
+    mutually comparable, and prediction ties do happen (policy dims a model
+    learned to ignore produce identical scores)."""
+    return (sc[0], repr(config_key(sc[1])))
+
+
+def _predict_all(predict, configs: list[Config]) -> list[float]:
+    many = getattr(predict, "predict_many", None)
+    if many is not None:
+        return [float(s) for s in many(configs)]
+    return [float(predict(c)) for c in configs]
+
+
 STRATEGIES: dict[str, Callable[..., SearchOutcome]] = {
     "random": random_search,
     "hillclimb": hill_climb,
     "evolve": evolutionary,
+    "surrogate": surrogate_search,
 }

@@ -41,8 +41,9 @@ from ..core.ir import Program
 from ..core.isel import Selection
 from ..core.sysgraph import SystemGraph, paper_accelerator, tpu_v5e
 from .cache import TuningCache, TuningRecord, default_cache_path
-from .evaluate import (CostModelEvaluator, MeasuredGemmEvaluator,
-                       ValidationReport, gemm_tile_for, validate_selection)
+from .evaluate import (CostModelEvaluator, LearnedEvaluator,
+                       MeasuredGemmEvaluator, ValidationReport, gemm_tile_for,
+                       validate_selection)
 from .space import ParamApproach, SearchSpace, tuning_key
 from .strategies import STRATEGIES, SearchOutcome
 
@@ -173,10 +174,31 @@ class CaseReport:
 
 def tune_case(case: TuneCase, graph: SystemGraph, strategy: str,
               trials: int, seed: int, backend: str,
-              validate: bool = True) -> CaseReport:
+              validate: bool = True, model_store=None,
+              strategy_explicit: bool = True) -> CaseReport:
     t0 = time.time()
     space = SearchSpace.for_graph(graph)
     cost_eval = CostModelEvaluator(case.selection, graph)
+    predict = None
+    if backend == "learned":
+        # The learned backend is surrogate-guided search: a trained model
+        # ranks the pool, the *cost* backend settles the real trials — so
+        # records land under 'cost' (one scale, and the kernels' lookup
+        # finds them).  No model for this family => plain cost backend.
+        learned = LearnedEvaluator.for_selection(case.selection, graph,
+                                                store=model_store)
+        backend = "cost"
+        if learned is not None:
+            predict = learned     # guarded: infeasible configs rank last
+            if strategy_explicit and strategy != "surrogate":
+                print(f"# {case.name}: --backend learned runs the "
+                      f"surrogate strategy (--strategy {strategy} ignored)",
+                      file=sys.stderr)
+        else:
+            print(f"# {case.name}: no trained model for this program "
+                  "family; falling back to the cost backend "
+                  "(train one: python -m repro.search.model train)",
+                  file=sys.stderr)
     if backend == "measure" and case.gemm_shape is not None:
         m, n, k = case.gemm_shape
         evaluate = MeasuredGemmEvaluator(m, n, k, graph)
@@ -184,7 +206,13 @@ def tune_case(case: TuneCase, graph: SystemGraph, strategy: str,
         backend = "cost"
         evaluate = cost_eval
 
-    outcome = STRATEGIES[strategy](space, evaluate, trials=trials, seed=seed)
+    if predict is not None:
+        outcome = STRATEGIES["surrogate"](space, evaluate, trials=trials,
+                                          seed=seed, predict=predict,
+                                          seeds=learned.anchors)
+    else:
+        outcome = STRATEGIES[strategy](space, evaluate, trials=trials,
+                                       seed=seed)
     if evaluate is not cost_eval and not math.isfinite(outcome.best_cost):
         # No candidate measured successfully (kernel errors / OOM): a
         # "measure" record would be meaningless yet preferred by
@@ -296,11 +324,20 @@ def main(argv=None) -> int:
     ap.add_argument("--topology", choices=["ring", "torus", "host"],
                     default="ring", help="fabric suite: fabric shape")
     ap.add_argument("--trials", type=int, default=32)
-    ap.add_argument("--strategy", choices=sorted(STRATEGIES),
-                    default="hillclimb")
-    ap.add_argument("--backend", choices=["cost", "measure"], default="cost",
+    ap.add_argument("--strategy", choices=sorted(STRATEGIES), default=None,
+                    help="search strategy (default hillclimb; --backend "
+                         "learned always runs 'surrogate')")
+    ap.add_argument("--backend", choices=["cost", "measure", "learned"],
+                    default="cost",
                     help="'measure' times the Pallas GEMM (TPU-meaningful; "
-                         "falls back to 'cost' for non-GEMM cases)")
+                         "falls back to 'cost' for non-GEMM cases); "
+                         "'learned' runs surrogate-guided search — a "
+                         "trained repro.search.model ranks the pool, the "
+                         "cost model settles the real trials (falls back "
+                         "to 'cost' when no model is trained)")
+    ap.add_argument("--model", default=None, metavar="PATH",
+                    help="model store for --backend learned (default: the "
+                         "repro.search.model default store)")
     ap.add_argument("--graph", choices=["v5e", "paper"], default="v5e")
     ap.add_argument("--cache", default=None,
                     help=f"cache path (default {default_cache_path()})")
@@ -310,6 +347,11 @@ def main(argv=None) -> int:
     ap.add_argument("--no-validate", action="store_true")
     ap.add_argument("--json", default=None, help="write the report here")
     args = ap.parse_args(argv)
+    # The resolved strategy (what the header/meta report): learned-backend
+    # runs are surrogate-guided unless the user forced something else —
+    # and then tune_case warns that the flag is ignored.
+    strategy = args.strategy or ("surrogate" if args.backend == "learned"
+                                 else "hillclimb")
 
     graph = make_graph(args.graph)
     cache = TuningCache(args.cache)
@@ -317,40 +359,57 @@ def main(argv=None) -> int:
     failures = 0
 
     if args.suite == "fabric":
+        if args.backend == "learned":
+            # No fabric-family models yet (the feature schema has no
+            # part_axis/collective terms — ROADMAP follow-up); silently
+            # running the default path would misreport what was tuned.
+            print("--backend learned is not supported for --suite fabric "
+                  "(train targets single-chip program families); use "
+                  "--backend cost", file=sys.stderr)
+            return 2
         from ..fabric.topology import make_topology
         topo = make_topology(args.topology, args.chips)
         shapes = FABRIC_GEMM_SIZES[:args.limit] if args.limit \
             else FABRIC_GEMM_SIZES
         print(f"# tuning {len(shapes)} fabric case(s): chips={args.chips} "
-              f"topology={topo.name} strategy={args.strategy} "
+              f"topology={topo.name} strategy={strategy} "
               f"trials={args.trials}")
         print(f"# cache: {cache.path}")
         runs = [(f"fabric_gemm_{m}x{n}x{k}_{topo.name}",
                  lambda m=m, n=n, k=k: tune_fabric_case(
-                     m, n, k, topo, args.strategy, args.trials, args.seed,
+                     m, n, k, topo, strategy, args.trials, args.seed,
                      validate=not args.no_validate))
                 for m, n, k in shapes]
-        recorder = lambda rep: fabric_record_for(rep, topo, args.strategy)  # noqa: E731
+        recorder = lambda rep: fabric_record_for(  # noqa: E731
+            rep, topo, rep.outcome.strategy)
     else:
         cases = build_cases(args.suite, args.limit)
         if not cases:
             print("no cases selected", file=sys.stderr)
             return 2
         print(f"# tuning {len(cases)} case(s): suite={args.suite} "
-              f"strategy={args.strategy} trials={args.trials} "
+              f"strategy={strategy} trials={args.trials} "
               f"backend={args.backend} graph={graph.name}")
         print(f"# cache: {cache.path}")
+        model_store = None
+        if args.backend == "learned":
+            from .model import ModelStore
+            model_store = ModelStore(args.model)
         by_name = {}
         runs = []
         for case in cases:
             by_name[case.name] = case
             runs.append((case.name,
                          lambda case=case: tune_case(
-                             case, graph, args.strategy, args.trials,
+                             case, graph, strategy, args.trials,
                              args.seed, args.backend,
-                             validate=not args.no_validate)))
+                             validate=not args.no_validate,
+                             model_store=model_store,
+                             strategy_explicit=args.strategy is not None)))
+        # Provenance from the outcome, not the CLI flag: --backend
+        # learned swaps the strategy to 'surrogate' per case.
         recorder = lambda rep: record_for(  # noqa: E731
-            by_name[rep.name], rep, graph, args.strategy)
+            by_name[rep.name], rep, graph, rep.outcome.strategy)
 
     for name, run in runs:
         rep = run()
@@ -372,7 +431,7 @@ def main(argv=None) -> int:
 
     if args.json:
         meta = {"schema": 1, "suite": args.suite,
-                "strategy": args.strategy, "trials": args.trials,
+                "strategy": strategy, "trials": args.trials,
                 "backend": args.backend, "graph": graph.name,
                 "cache": cache.path, "failures": failures}
         if args.suite == "fabric":
