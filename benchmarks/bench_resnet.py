@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from repro.core import instructions as I
 from repro.core import kernels_ir as K
-from repro.core.isel import select_instructions
 from repro.core.scheduler import schedule
 from repro.core.sysgraph import V5E_PEAK_FLOPS, tpu_v5e
 

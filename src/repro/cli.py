@@ -23,6 +23,8 @@ COMMANDS = {
     "tune": ("repro.search.tune", "joint mapping/schedule autotuner"),
     "model": ("repro.search.model", "learned cost model train/eval/export"),
     "compile": ("repro.compile.__main__", "compilation driver CLI"),
+    "verify": ("repro.verify.cli", "static analyzer sweep + mutation "
+                                   "harness"),
     "fabric": ("repro.fabric.simulate", "multi-chip fabric simulator"),
     "dryrun": ("repro.launch.dryrun", "dry-run roofline matrix"),
     "train": ("repro.launch.train", "training launch"),

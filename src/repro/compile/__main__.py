@@ -71,7 +71,7 @@ def _compile_case(kernel: str, kw: dict, approach, args):
                               approach=approach)
     fn = {"gemm": compile_gemm, "gru": compile_gru,
           "conv": compile_conv}[kernel]
-    return fn(approach=approach, **kw)
+    return fn(approach=approach, verify=not args.no_verify, **kw)
 
 
 def _proxy_args(kernel: str, kw: dict) -> dict:
@@ -124,6 +124,8 @@ def main(argv=None) -> int:
                     help="persistent artifact cache (activated process-wide)")
     ap.add_argument("--no-cache", action="store_true",
                     help="compile fresh, ignoring any cache")
+    ap.add_argument("--no-verify", action="store_true",
+                    help="skip the static verifier pass (escape hatch)")
     ap.add_argument("--validate", action="store_true",
                     help="bit-exact oracle replay on a proxy-capped shape")
     ap.add_argument("--expect-cached", action="store_true",

@@ -147,6 +147,14 @@ class ArtifactCache:
         d = self.load().get(key)
         if d is None:
             return None
+        from ..verify import verify_artifact_dict
+        diags = verify_artifact_dict(d)
+        if diags:
+            warn_corrupt_cache(
+                self.path,
+                ValueError(f"artifact {key!r} failed payload verification: "
+                           + "; ".join(str(x) for x in diags[:3])))
+            return None
         try:
             return CompiledKernel.from_dict(d)
         except CACHE_ERRORS as e:

@@ -28,7 +28,7 @@ from .artifact import CompiledKernel, CompileError
 from .cache import (ArtifactCache, artifact_key, cacheable_approach,
                     get_default_artifact_cache)
 from .pipeline import (CompileContext, LowerPass, MapPass, Pipeline,
-                       SchedulePass, SelectPass)
+                       SchedulePass, SelectPass, VerifyPass)
 
 #: In-process artifact memo (the successor of ``plan_gemm``'s lru_cache):
 #: fresh compiles with a reproducible approach are reused by key.
@@ -142,7 +142,8 @@ def _store(art: CompiledKernel, cache: ArtifactCache | None,
 
 def _finish(ctx: CompileContext, cache: ArtifactCache | None,
             memoize: bool) -> CompiledKernel:
-    return _store(Pipeline(passes=(SchedulePass(), LowerPass())).run(ctx),
+    return _store(Pipeline(passes=(SchedulePass(), VerifyPass(),
+                                   LowerPass())).run(ctx),
                   cache, memoize)
 
 
@@ -167,9 +168,11 @@ def compile_program(program: Program, graph: SystemGraph | None = None,
                     approach=None, isa=None, *,
                     allow_transforms: bool = True, backend: str = "cost",
                     cache: ArtifactCache | None = None, use_cache: bool = True,
+                    verify: bool = True,
                     meta: dict | None = None) -> CompiledKernel:
     """Program + SystemGraph + Approach -> CompiledKernel, through the full
-    Map -> Select -> Schedule -> Lower pipeline."""
+    Map -> Select -> Schedule -> Verify -> Lower pipeline.  ``verify=False``
+    is the ``--no-verify`` escape hatch."""
     graph = graph if graph is not None else tpu_v5e(1)
     approach = resolve_approach(approach)
     isa = list(isa) if isa else I.tpu_isa()
@@ -181,7 +184,8 @@ def compile_program(program: Program, graph: SystemGraph | None = None,
         return hit
     ctx = CompileContext(program=program, graph=graph, approach=approach,
                          isa=isa, allow_transforms=allow_transforms,
-                         backend=backend, meta=dict(meta or {}))
+                         backend=backend, verify=verify,
+                         meta=dict(meta or {}))
     ctx.meta.setdefault("allow_transforms", allow_transforms)
     MapPass().run(ctx)
     SelectPass().run(ctx)
@@ -191,19 +195,23 @@ def compile_program(program: Program, graph: SystemGraph | None = None,
 def compile_selection(selection: Selection, graph: SystemGraph,
                       approach=None, *, backend: str = "cost",
                       program: Program | None = None,
+                      verify: bool = False,
                       meta: dict | None = None) -> CompiledKernel:
     """Schedule + Lower an existing Selection (no caching: this is the hot
-    inner entry the search evaluators and per-chip fabric compiles use)."""
+    inner entry the search evaluators and per-chip fabric compiles use, so
+    the static verifier is opt-in here — pass ``verify=True`` to gate)."""
     approach = resolve_approach(approach)
     ctx = CompileContext(program=program or selection.program, graph=graph,
                          approach=approach, backend=backend,
                          meta=dict(meta or {}))
     ctx.selection = selection
-    return Pipeline(passes=(SchedulePass(), LowerPass())).run(ctx)
+    passes = ((SchedulePass(), VerifyPass(), LowerPass()) if verify
+              else (SchedulePass(), LowerPass()))
+    return Pipeline(passes=passes).run(ctx)
 
 
 def _compile_frontend(frontend: str, fe_args: dict, graph, approach, backend,
-                      cache, use_cache) -> CompiledKernel:
+                      cache, use_cache, verify: bool = True) -> CompiledKernel:
     graph = graph if graph is not None else tpu_v5e(1)
     approach = resolve_approach(approach)
     cache = _resolve_cache(cache, use_cache)
@@ -220,7 +228,7 @@ def _compile_frontend(frontend: str, fe_args: dict, graph, approach, backend,
         return hit
     ctx = CompileContext(program=program, graph=graph, approach=approach,
                          isa=isa, allow_transforms=allow_transforms,
-                         backend=backend,
+                         backend=backend, verify=verify,
                          meta={"frontend": frontend,
                                "frontend_args": dict(fe_args)})
     ctx.selection = _sel_builder()
@@ -255,27 +263,28 @@ def _frontend_program(frontend: str, fe_args: dict):
 def compile_gemm(m: int, n: int, k: int, approach=None,
                  graph: SystemGraph | None = None, *,
                  backend: str = "cost", cache: ArtifactCache | None = None,
-                 use_cache: bool = True) -> CompiledKernel:
+                 use_cache: bool = True, verify: bool = True) -> CompiledKernel:
     return _compile_frontend("gemm", {"m": m, "n": n, "k": k}, graph,
-                             approach, backend, cache, use_cache)
+                             approach, backend, cache, use_cache, verify)
 
 
 def compile_gru(batch: int, hidden: int, inp: int | None = None,
                 approach=None, graph: SystemGraph | None = None, *,
                 backend: str = "cost", cache: ArtifactCache | None = None,
-                use_cache: bool = True) -> CompiledKernel:
+                use_cache: bool = True, verify: bool = True) -> CompiledKernel:
     fe_args = {"batch": batch, "hidden": hidden}
     if inp is not None:
         fe_args["inp"] = inp
     return _compile_frontend("gru", fe_args, graph, approach, backend,
-                             cache, use_cache)
+                             cache, use_cache, verify)
 
 
 def compile_conv(approach=None, graph: SystemGraph | None = None, *,
                  backend: str = "cost", cache: ArtifactCache | None = None,
-                 use_cache: bool = True, **kw) -> CompiledKernel:
+                 use_cache: bool = True, verify: bool = True,
+                 **kw) -> CompiledKernel:
     return _compile_frontend("conv", kw, graph, approach, backend, cache,
-                             use_cache)
+                             use_cache, verify)
 
 
 # --------------------------------------------------------------------------- #

@@ -147,7 +147,7 @@ class Approach:
             for _, region, r, w in tile.operands:
                 resident = state.holds_region(c.memory, region)
                 if (r or w) and not resident:
-                    missing += region.nbytes()
+                    missing += state.nbytes(region)
             load = state.device_load.get(c.name, 0.0)
             key = ((load, missing) if self.device_policy == "load"
                    else (missing, load))

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from .ir import Access, Axis, Buffer, Program, Statement, interpret
+from .ir import Axis, Buffer, Program, interpret
 from .isel import SelectedInstr, Selection
 from .scheduler import Region, Schedule, ScheduledOp
 
@@ -79,8 +79,6 @@ class Machine:
         si = selection.instrs[tile.instr_idx]
         mem = self.sched.graph.computes[op.device].memory
         needle = _sized_needle(si, tile)
-        bm = dict(si.mapping.buffer_map)
-        dm = dict(si.mapping.dim_map)
 
         ins: dict[str, np.ndarray] = {}
         out_specs: list[tuple[str, Region, np.ndarray]] = []

@@ -15,7 +15,7 @@ from dataclasses import dataclass
 
 from .ir import Program
 from .mapper import InstrMapping, map_program
-from .transforms import SearchResult, search_mappings
+from .transforms import search_mappings
 
 
 @dataclass(frozen=True)

@@ -117,11 +117,16 @@ def gru_cell(batch: int, hidden: int, inp: int) -> Program:
     h2 = pb.axis("h2", hidden)  # reduction axis over previous hidden
     X = pb.buffer("X", (batch, inp))
     H = pb.buffer("H", (batch, hidden))
-    Wr = pb.buffer("Wr", (inp, hidden)); Ur = pb.buffer("Ur", (hidden, hidden))
-    Wz = pb.buffer("Wz", (inp, hidden)); Uz = pb.buffer("Uz", (hidden, hidden))
-    Wn = pb.buffer("Wn", (inp, hidden)); Un = pb.buffer("Un", (hidden, hidden))
-    br = pb.buffer("br", (hidden,)); bz = pb.buffer("bz", (hidden,))
-    bnx = pb.buffer("bnx", (hidden,)); bnh = pb.buffer("bnh", (hidden,))
+    Wr = pb.buffer("Wr", (inp, hidden))
+    Ur = pb.buffer("Ur", (hidden, hidden))
+    Wz = pb.buffer("Wz", (inp, hidden))
+    Uz = pb.buffer("Uz", (hidden, hidden))
+    Wn = pb.buffer("Wn", (inp, hidden))
+    Un = pb.buffer("Un", (hidden, hidden))
+    br = pb.buffer("br", (hidden,))
+    bz = pb.buffer("bz", (hidden,))
+    bnx = pb.buffer("bnx", (hidden,))
+    bnh = pb.buffer("bnh", (hidden,))
     R = pb.buffer("R", (batch, hidden), temp=True)
     Z = pb.buffer("Z", (batch, hidden), temp=True)
     Nb = pb.buffer("N", (batch, hidden), temp=True)
@@ -137,25 +142,31 @@ def gru_cell(batch: int, hidden: int, inp: int) -> Program:
     t6 = pb.temp("t6", (batch, hidden, hidden))
 
     # r gate
-    pb.stmt(t1[b, o, e], ":=", X[b, e]); pb.stmt(t1[b, o, e], "*=", Wr[e, o])
+    pb.stmt(t1[b, o, e], ":=", X[b, e])
+    pb.stmt(t1[b, o, e], "*=", Wr[e, o])
     pb.stmt(R[b, o], "+=", t1[b, o, e])
-    pb.stmt(t2[b, o, h2], ":=", H[b, h2]); pb.stmt(t2[b, o, h2], "*=", Ur[h2, o])
+    pb.stmt(t2[b, o, h2], ":=", H[b, h2])
+    pb.stmt(t2[b, o, h2], "*=", Ur[h2, o])
     pb.stmt(R[b, o], "+=", t2[b, o, h2])
     pb.stmt(R[b, o], "+=", br[o])
     pb.apply(R[b, o], "sigmoid", R[b, o])
     # z gate
-    pb.stmt(t3[b, o, e], ":=", X[b, e]); pb.stmt(t3[b, o, e], "*=", Wz[e, o])
+    pb.stmt(t3[b, o, e], ":=", X[b, e])
+    pb.stmt(t3[b, o, e], "*=", Wz[e, o])
     pb.stmt(Z[b, o], "+=", t3[b, o, e])
-    pb.stmt(t4[b, o, h2], ":=", H[b, h2]); pb.stmt(t4[b, o, h2], "*=", Uz[h2, o])
+    pb.stmt(t4[b, o, h2], ":=", H[b, h2])
+    pb.stmt(t4[b, o, h2], "*=", Uz[h2, o])
     pb.stmt(Z[b, o], "+=", t4[b, o, h2])
     pb.stmt(Z[b, o], "+=", bz[o])
     pb.apply(Z[b, o], "sigmoid", Z[b, o])
     # n gate
-    pb.stmt(t6[b, o, h2], ":=", H[b, h2]); pb.stmt(t6[b, o, h2], "*=", Un[h2, o])
+    pb.stmt(t6[b, o, h2], ":=", H[b, h2])
+    pb.stmt(t6[b, o, h2], "*=", Un[h2, o])
     pb.stmt(Hn[b, o], "+=", t6[b, o, h2])
     pb.stmt(Hn[b, o], "+=", bnh[o])
     pb.stmt(Hn[b, o], "*=", R[b, o])
-    pb.stmt(t5[b, o, e], ":=", X[b, e]); pb.stmt(t5[b, o, e], "*=", Wn[e, o])
+    pb.stmt(t5[b, o, e], ":=", X[b, e])
+    pb.stmt(t5[b, o, e], "*=", Wn[e, o])
     pb.stmt(Nb[b, o], "+=", t5[b, o, e])
     pb.stmt(Nb[b, o], "+=", Hn[b, o])
     pb.stmt(Nb[b, o], "+=", bnx[o])
@@ -200,10 +211,12 @@ def mlp_gate(batch: int, d_model: int, d_ff: int) -> Program:
     Y = pb.buffer("Y", (batch, d_ff))
     t1 = pb.temp("t1", (batch, d_ff, d_model))
     t2 = pb.temp("t2", (batch, d_ff, d_model))
-    pb.stmt(t1[b, f, e], ":=", X[b, e]); pb.stmt(t1[b, f, e], "*=", Wg[e, f])
+    pb.stmt(t1[b, f, e], ":=", X[b, e])
+    pb.stmt(t1[b, f, e], "*=", Wg[e, f])
     pb.stmt(G[b, f], "+=", t1[b, f, e])
     pb.apply(G[b, f], "sigmoid", G[b, f])
-    pb.stmt(t2[b, f, e], ":=", X[b, e]); pb.stmt(t2[b, f, e], "*=", Wu[e, f])
+    pb.stmt(t2[b, f, e], ":=", X[b, e])
+    pb.stmt(t2[b, f, e], "*=", Wu[e, f])
     pb.stmt(U[b, f], "+=", t2[b, f, e])
     pb.stmt(Y[b, f], ":=", G[b, f])
     pb.stmt(Y[b, f], "*=", U[b, f])

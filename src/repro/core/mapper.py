@@ -25,9 +25,9 @@ choose which IR transformation to try next.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
-from .ir import Access, Program, Statement
+from .ir import Access, Program
 
 # --------------------------------------------------------------------------- #
 # Results

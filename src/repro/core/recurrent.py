@@ -24,7 +24,7 @@ import numpy as np
 from .approach import Approach
 from .executor import Machine
 from .isel import Selection
-from .scheduler import Region, Schedule, Scheduler, SchedulerState
+from .scheduler import Schedule, Scheduler, SchedulerState
 from .sysgraph import SystemGraph
 
 

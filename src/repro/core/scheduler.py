@@ -22,15 +22,14 @@ by the benchmarks and by CostModelApproach.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, field
 
-import numpy as np
 
 from .approach import Approach, GreedyApproach
 from .dtypes import DTYPE_BYTES  # noqa: F401  (re-exported; one shared table)
 from .ir import Program
 from .isel import SelectedInstr, Selection
-from .sysgraph import ComputeNode, MoveEdge, SystemGraph
+from .sysgraph import ComputeNode, SystemGraph
 
 # --------------------------------------------------------------------------- #
 # Regions and tiles
@@ -81,7 +80,6 @@ class ComputeTile:
 
     def red_key(self):
         """Offsets on non-output axes (reduction/outer) — orders k-innermost."""
-        out = self.output_region()
         return tuple(sorted(self.offsets.items()))
 
     def flops(self) -> float:
@@ -135,8 +133,17 @@ class Schedule:
             c[op.kind] = c.get(op.kind, 0) + 1
         return c
 
+    def region_nbytes(self, region: Region) -> int:
+        """Byte size of a region under its buffer's declared dtype (regions
+        themselves are dtype-blind element ranges)."""
+        try:
+            dtype = self.program.buffer(region.buffer).dtype
+        except KeyError:
+            dtype = "f32"
+        return region.nbytes(dtype)
+
     def bytes_moved(self) -> int:
-        return sum(op.region.nbytes() for op in self.ops
+        return sum(self.region_nbytes(op.region) for op in self.ops
                    if op.kind in ("copy", "writeback"))
 
 
@@ -167,9 +174,11 @@ class SchedulerState:
     paper's virtual cache invalidation on every stale copy.
     """
 
-    def __init__(self, graph: SystemGraph, homes: dict[str, str]):
+    def __init__(self, graph: SystemGraph, homes: dict[str, str],
+                 dtypes: dict[str, str] | None = None):
         self.graph = graph
         self.homes = homes                      # buffer -> home memory node
+        self.dtypes = dict(dtypes or {})        # buffer -> dtype
         self.version: dict[tuple, int] = {}     # region key -> latest version
         # region key -> {memory node -> version held}
         self.copies: dict[tuple, dict[str, int]] = {}
@@ -182,6 +191,10 @@ class SchedulerState:
     @staticmethod
     def key(region: Region) -> tuple:
         return (region.buffer, region.bounds)
+
+    def nbytes(self, region: Region) -> int:
+        """Region size under the owning buffer's dtype (f32 when unknown)."""
+        return region.nbytes(self.dtypes.get(region.buffer, "f32"))
 
     def holders(self, region: Region) -> dict[str, int]:
         """Memory nodes holding the LATEST version of this region.  The home
@@ -206,7 +219,7 @@ class SchedulerState:
         k = self.key(region)
         holders = self.copies.setdefault(k, {})
         if node not in holders:
-            self.used[node] = self.used.get(node, 0) + region.nbytes()
+            self.used[node] = self.used.get(node, 0) + self.nbytes(region)
         holders[node] = version
         self.touch(node, region)
 
@@ -226,7 +239,7 @@ class SchedulerState:
         holders = self.copies.get(region_key, {})
         if node in holders:
             holders.pop(node)
-            self.used[node] -= Region(*region_key).nbytes()
+            self.used[node] -= self.nbytes(Region(*region_key))
         self.lru.pop((node, region_key), None)
 
     def overlapping_dirty(self, region: Region,
@@ -271,7 +284,9 @@ class Scheduler:
             b.name: self.approach.choose_home(
                 b.name, self._buffer_bytes(b.name), graph)
             for b in self.prog.buffers if not b.temp or self._materialized(b.name)}
-        self.state = state or SchedulerState(graph, self.homes)
+        self.state = state or SchedulerState(
+            graph, self.homes, dtypes={b.name: b.dtype
+                                       for b in self.prog.buffers})
         self.ops: list[ScheduledOp] = []
         self._uid = 0
 
@@ -324,8 +339,6 @@ class Scheduler:
                     if a not in window_axes:
                         window_axes.append(a)
 
-        mapped_ext = {axis_map[na]: self.prog.axis(axis_map[na]).size
-                      for na in axis_map}
         devices = self.graph.compute_nodes_for(si.needle.name)
         vmem_cap = min(self.graph.memories[d.memory].capacity
                        for d in devices) if devices else None
@@ -479,7 +492,8 @@ class Scheduler:
                         if v == v2), None)
             if src is None or src == home:
                 continue
-            for e in self.graph.shortest_path(src, home, r2.nbytes()):
+            for e in self.graph.shortest_path(src, home,
+                                              self.state.nbytes(r2)):
                 self._emit(kind="writeback", device=e.issuer, src=e.src,
                            dst=e.dst, region=r2)
             self.state.install(home, r2, dirty=False)
@@ -510,7 +524,7 @@ class Scheduler:
         if dst in holders:
             self.state.touch(dst, region)
             return
-        nbytes = region.nbytes()
+        nbytes = self.state.nbytes(region)
         options = []
         for node in holders:
             try:
@@ -549,7 +563,8 @@ class Scheduler:
             if ver == latest and latest > 0 and node != home \
                     and self.state.copies.get(k, {}).get(home) != latest:
                 # dirty sole-latest copy: write back along the path home
-                for e in self.graph.shortest_path(node, home, region.nbytes()):
+                for e in self.graph.shortest_path(node, home,
+                                                  self.state.nbytes(region)):
                     self._emit(kind="writeback", device=e.issuer, src=e.src,
                                dst=e.dst, region=region)
                 self.state.install(home, region, dirty=False)
@@ -587,7 +602,7 @@ class Scheduler:
                     self._route_region(region, mem, dev.name, pinned)
                 else:
                     self._reconcile(region)  # overlapping dirty data -> home
-                    self._make_room(mem, region.nbytes(), pinned)
+                    self._make_room(mem, self.state.nbytes(region), pinned)
                     self.state.install(mem, region, dirty=False)
             self._emit(kind="compute", device=dev.name, tile=tile)
             self.state.device_load[dev.name] = (
@@ -621,7 +636,8 @@ class Scheduler:
             if self.state.copies.get(k, {}).get(home) == latest:
                 continue
             src = next(n for n, v in holders.items() if v == latest)
-            for e in self.graph.shortest_path(src, home, region.nbytes()):
+            for e in self.graph.shortest_path(src, home,
+                                              self.state.nbytes(region)):
                 self._emit(kind="writeback", device=e.issuer, src=e.src,
                            dst=e.dst, region=region)
             self.state.install(home, region, dirty=False)
@@ -678,7 +694,7 @@ def cost_model(sched: Schedule) -> float:
             res = f"dma:{op.src}->{op.dst}"
             ready = avail(op.region, op.src)
             start = max(resource_free.get(res, 0.0), ready)
-            dur = e.latency + op.region.nbytes() / e.bandwidth
+            dur = e.latency + sched.region_nbytes(op.region) / e.bandwidth
             end = start + dur
             resource_free[res] = end
             key = ((op.region.buffer, op.region.bounds), op.dst)

@@ -13,8 +13,8 @@ them against the NumPy oracle), modulo buffer-view adaptation exposed through
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Iterable, Mapping
+from dataclasses import dataclass
+from typing import Iterable
 
 import numpy as np
 

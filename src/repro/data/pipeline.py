@@ -12,7 +12,6 @@ import dataclasses
 import hashlib
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..models.config import ModelConfig

@@ -77,6 +77,12 @@ class EventSim:
         self._tasks: list[_Task] = []
         self._known: set[str] = set()
 
+    @property
+    def tasks(self) -> list[tuple[str, tuple[str, ...]]]:
+        """(tid, deps) pairs in insertion order — the auditable dependency
+        graph ``repro.verify.fabric.verify_task_graph`` checks."""
+        return [(t.tid, t.deps) for t in self._tasks]
+
     def add(self, tid: str, resource: str | None = None,
             duration: float = 0.0, deps=(), ready: float = 0.0) -> str:
         if tid in self._known:
@@ -143,7 +149,7 @@ def _add_chip_schedule(sim: EventSim, chip: int, sched: Schedule,
             deps = ([avail[(k, op.src)]] if (k, op.src) in avail
                     else _initial(op.region, op.src))
             e = g.edge(op.src, op.dst)
-            dur = e.latency + op.region.nbytes() / e.bandwidth
+            dur = e.latency + sched.region_nbytes(op.region) / e.bandwidth
             sim.add(tid, resource=f"{pre}dma:{op.src}->{op.dst}",
                     duration=dur, deps=deps)
             avail[(k, op.dst)] = tid
@@ -301,8 +307,12 @@ class FabricResult:
 
 def simulate_partition(pp: PartitionedProgram, topo: Topology,
                        approach=None, algorithm: str = "ring",
-                       chip_graph: SystemGraph | None = None) -> FabricResult:
-    """Distributed makespan of one partition choice on one fabric."""
+                       chip_graph: SystemGraph | None = None,
+                       sim_out: list | None = None) -> FabricResult:
+    """Distributed makespan of one partition choice on one fabric.
+
+    ``sim_out``, when given, receives the assembled ``EventSim`` so callers
+    (``repro verify``) can audit the task graph without re-building it."""
     if topo.n_chips != len(pp.shards):
         raise ValueError(
             f"partition has {len(pp.shards)} shards but the topology has "
@@ -408,6 +418,8 @@ def simulate_partition(pp: PartitionedProgram, topo: Topology,
     for arr in arrivals.values():
         comm_tids.extend(arr.values())
 
+    if sim_out is not None:
+        sim_out.append(sim)
     times = sim.run()
     makespan = max((end for _, end in times.values()), default=0.0)
     chip_spans = [max((times[t][1] for t in chip_tids.get(c, [])), default=0.0)

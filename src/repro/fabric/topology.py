@@ -18,7 +18,7 @@ host memory over PCIe, which is exactly why it loses the scaling sweeps.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from ..core.sysgraph import V5E_ICI_BW, SystemGraph, add_v5e_chip
 

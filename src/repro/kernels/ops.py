@@ -14,8 +14,6 @@ from __future__ import annotations
 import jax
 
 from ..compile import CompileError, compile_gemm, compile_gru
-from . import gemm as gemm_kernel
-from . import gru as gru_kernel
 from .gemm import gemm, gemm_bias_act, tuned_block
 from .gru import gru_cell, gru_seq
 

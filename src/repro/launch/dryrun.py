@@ -23,7 +23,6 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCHS, cell_applicable, get_config, input_specs
 from ..dist.ctx import activation_sharding_ctx

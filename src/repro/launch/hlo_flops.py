@@ -258,12 +258,9 @@ class HloStats:
 def analyse_hlo(text: str) -> HloStats:
     comps = parse_computations(text)
     stats = HloStats()
-    entry = None
-    for name, c in comps.items():
-        # ENTRY computation is the one no other computation calls; XLA marks
-        # it with ENTRY in the header which our regex folds away — detect by
-        # absence from call sites below instead.
-        pass
+    # ENTRY computation is the one no other computation calls; XLA marks it
+    # with ENTRY in the header which our regex folds away — detect by absence
+    # from call sites instead.
     called_names: set[str] = set()
     for c in comps.values():
         for ins in c.instrs:

@@ -3,13 +3,12 @@ the server.  Everything is built AOT-friendly: callers lower these with
 ShapeDtypeStructs and explicit in/out shardings."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from ..models import build_model
-from ..models.config import ModelConfig, ShapeConfig
+from ..models.config import ModelConfig
 from ..optim.adamw import AdamWConfig, OptState, apply_updates, init_opt_state
 
 

@@ -12,20 +12,17 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 
 from ..checkpoint.ckpt import Checkpointer
 from ..configs import ARCHS, get_config, get_smoke_config
 from ..data.pipeline import DataConfig, add_frontend_stub, make_source
 from ..dist.ctx import activation_sharding_ctx
-from ..dist.sharding import (batch_shardings, make_activation_rules,
-                             param_shardings, replicated)
+from ..dist.sharding import make_activation_rules, param_shardings, replicated
 from ..models.config import ModelConfig
 from ..optim.adamw import AdamWConfig, init_opt_state
-from ..runtime.fault_tolerance import StragglerDetector, TrainingRuntime
+from ..runtime.fault_tolerance import TrainingRuntime
 from .mesh import make_host_mesh
 from .steps import make_train_step
 

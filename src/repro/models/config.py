@@ -1,9 +1,8 @@
 """Model configuration + shape descriptors for the assigned architectures."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
-import jax
 import jax.numpy as jnp
 
 

@@ -15,7 +15,7 @@ from ..dist.ctx import constrain
 from .attention import (attention, decode_attention, init_attn_params,
                         init_kv_cache, prefill_attention)
 from .config import ModelConfig
-from .layers import cross_entropy_loss, init_dense, norm_fn, swiglu
+from .layers import cross_entropy_loss, init_dense, norm_fn
 from .moe import init_moe_params, moe_ffn
 
 

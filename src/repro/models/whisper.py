@@ -6,7 +6,6 @@ The decoder is a causal transformer with cross-attention; decode caches both
 the self-attention KV and the per-layer cross KV projections."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ import jax.numpy as jnp
 from .attention import (attention, cross_attention, decode_attention,
                         init_attn_params, init_kv_cache, prefill_attention)
 from .config import ModelConfig
-from .layers import cross_entropy_loss, init_dense, norm_fn, swiglu
+from .layers import cross_entropy_loss, init_dense, norm_fn
 from .transformer import ffn, init_ffn_params
 
 

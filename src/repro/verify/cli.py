@@ -1,0 +1,159 @@
+"""``repro verify`` — run the static analyzer over the tune suites.
+
+    repro verify                          # gemm+gru+conv+fabric, greedy
+    repro verify --suite gemm,conv        # subset
+    repro verify --tuned                  # also check tuned configs (cache)
+    repro verify --mutate                 # prove the rules fire (harness)
+    repro verify --json report.json
+
+Every case compiles fresh (Schedule only — the verifier is the subject
+here, so it runs *after* the pipeline, not inside it) and the report lists
+each diagnostic with its rule id.  Exit status: 0 iff every compile
+verifies clean and — with ``--mutate`` — every corruption class is caught.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+SUITES = ("gemm", "gru", "conv", "fabric")
+
+
+def _verify_suite_cases(suite: str, limit, tuned: bool, rows: list) -> int:
+    from ..compile.driver import compile_selection
+    from ..search.tune import build_cases, make_graph
+    from . import verify_compile
+    failures = 0
+    graph = make_graph("tpu")
+    for case in build_cases(suite, limit):
+        for label, approach in _approaches(case, graph, tuned):
+            art = compile_selection(case.selection, graph, approach,
+                                    program=case.program)
+            report = verify_compile(selection=case.selection,
+                                    schedule=art.schedule,
+                                    approach=art.approach)
+            failures += _emit(f"{case.name}[{label}]", report, rows)
+    return failures
+
+
+def _approaches(case, graph, tuned: bool):
+    """(label, approach) pairs for one case: greedy, plus the tuned config
+    when a cache record exists."""
+    yield "greedy", None
+    if not tuned:
+        return
+    from ..search.cache import get_default_cache
+    from ..search.space import ParamApproach, tuning_key
+    cache = get_default_cache()
+    rec = cache.lookup(tuning_key(case.program, graph, "cost"))
+    if rec is not None and getattr(rec, "config", None):
+        yield "tuned", ParamApproach(rec.config)
+
+
+def _verify_fabric_cases(limit, rows: list) -> int:
+    from ..fabric.partition import partition, partition_axes
+    from ..fabric.topology import make_topology
+    from . import DiagnosticReport, verify_fabric
+    from ..search.tune import FABRIC_GEMM_SIZES
+    failures = 0
+    topo = make_topology("ring", 4)
+    shapes = FABRIC_GEMM_SIZES[:limit] if limit else FABRIC_GEMM_SIZES
+    for shape in shapes:
+        for axis in partition_axes("gemm"):
+            pp = partition("gemm", shape, axis, topo.n_chips)
+            report = DiagnosticReport()
+            report.extend(verify_fabric(pp, topo))
+            name = "fabric_gemm_{}_{}".format("x".join(map(str, shape)), axis)
+            failures += _emit(name, report, rows)
+    return failures
+
+
+def _emit(name: str, report, rows: list) -> int:
+    rows.append({"case": name, **report.to_dict()})
+    status = "ok" if report.ok else "FAIL"
+    extra = f", {len(report.warnings)} warning(s)" if report.warnings else ""
+    print(f"[{status}] {name}: {len(report.errors)} error(s){extra}")
+    for d in report.diagnostics:
+        print(f"    {d}")
+    return 0 if report.ok else 1
+
+
+def _run_mutations(rows: list) -> int:
+    from .mutate import baseline_report, run_all
+    base = baseline_report()
+    failures = _emit("mutate-baseline", base, rows)
+    missed = total = 0
+    for res in run_all():
+        print(f"  {res}")
+        rows.append({"mutation": res.name, "expected": res.expected,
+                     "caught": res.caught, "rules": sorted(set(res.rules))})
+        missed += not res.caught
+        total += 1
+    if missed:
+        print(f"[FAIL] mutation harness: {missed} class(es) NOT caught")
+    else:
+        print(f"[ok] mutation harness: all {total} classes caught")
+    return failures + missed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro verify",
+        description="Static analyzer sweep: verify every tune-suite compile "
+                    "(program/selection/schedule/fabric layers) and "
+                    "optionally prove the rules fire via the mutation "
+                    "harness.")
+    ap.add_argument("--suite", default="all",
+                    help=f"comma list from {SUITES} or 'all'")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="cap the number of cases per suite")
+    ap.add_argument("--tuned", action="store_true",
+                    help="also verify tuned configs from the tuning cache")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="tuning cache for --tuned (default: the standard "
+                         "cache location)")
+    ap.add_argument("--mutate", action="store_true",
+                    help="run the mutation harness as well")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--json", default=None, help="write the report here")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        from .diagnostics import RULES
+        for rule, desc in RULES.items():
+            print(f"{rule:<22} {desc}")
+        return 0
+
+    suites = SUITES if args.suite == "all" else \
+        tuple(s.strip() for s in args.suite.split(","))
+    bad = [s for s in suites if s not in SUITES]
+    if bad:
+        ap.error(f"unknown suite(s) {bad}; pick from {SUITES}")
+
+    if args.cache:
+        from ..search.cache import TuningCache, set_default_cache
+        set_default_cache(TuningCache(args.cache))
+
+    rows: list = []
+    failures = 0
+    for suite in suites:
+        if suite == "fabric":
+            failures += _verify_fabric_cases(args.limit, rows)
+        else:
+            failures += _verify_suite_cases(suite, args.limit, args.tuned,
+                                            rows)
+    if args.mutate:
+        failures += _run_mutations(rows)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"schema": 1, "failures": failures, "rows": rows},
+                      f, indent=2)
+        print(f"# report: {args.json}")
+    print(f"# {len(rows)} check(s), {failures} failure(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

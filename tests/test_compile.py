@@ -6,7 +6,6 @@ against the ISAMIR oracle."""
 import json
 import warnings
 
-import numpy as np
 import pytest
 
 from repro.compile import (ArtifactCache, CompileError, artifact_key,

@@ -1,15 +1,13 @@
 """repro.fabric tests: topologies, partitioning + bit-exact re-materialization,
 collective lowering, the event-driven simulator, and the joint distributed
 search integration."""
-import numpy as np
 import pytest
 
 from repro.fabric.collectives import (ALGORITHMS, all_gather_time,
                                       all_reduce_time, lower_all_gather,
                                       lower_all_reduce, lower_reduce_scatter,
                                       reduce_scatter_time)
-from repro.fabric.partition import (partition, partition_gemm, partition_gru,
-                                    replay_bitexact, split_extent)
+from repro.fabric.partition import partition_gemm, partition_gru, replay_bitexact, split_extent
 from repro.fabric.simulate import (EventSim, FabricEvaluator, replicate_output,
                                    simulate_partition, single_chip_makespan)
 from repro.fabric.topology import (Topology, host_tree, make_topology, ring,

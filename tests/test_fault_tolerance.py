@@ -1,0 +1,175 @@
+"""Tests for repro.runtime.fault_tolerance: straggler EWMA, checkpoint/
+restart, SIGTERM preemption, elastic re-mesh restore."""
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import Checkpointer
+from repro.runtime.fault_tolerance import (RunState, StragglerDetector,
+                                           TrainingRuntime)
+
+
+# --------------------------------------------------------------------------- #
+# StragglerDetector
+# --------------------------------------------------------------------------- #
+
+
+def test_straggler_first_observation_seeds_ewma():
+    det = StragglerDetector()
+    assert det.observe(0, 0.5) is False
+    assert det.ewma == 0.5
+    assert det.slow_steps == []
+
+
+def test_straggler_flags_spike_above_threshold():
+    det = StragglerDetector(alpha=0.2, threshold=2.0)
+    det.observe(0, 1.0)
+    assert det.observe(1, 1.1) is False            # within 2x EWMA
+    assert det.observe(2, 5.0) is True             # 5x the baseline
+    (step, dt, ewma), = det.slow_steps
+    assert step == 2 and dt == 5.0
+    # the EWMA recorded is the one the decision was made against
+    assert dt > det.threshold * ewma
+
+
+def test_straggler_ewma_update_rule():
+    det = StragglerDetector(alpha=0.25, threshold=10.0)
+    det.observe(0, 1.0)
+    det.observe(1, 2.0)
+    assert det.ewma == pytest.approx(0.75 * 1.0 + 0.25 * 2.0)
+
+
+def test_straggler_adapts_to_sustained_slowdown():
+    det = StragglerDetector(alpha=0.5, threshold=2.0)
+    det.observe(0, 1.0)
+    assert det.observe(1, 3.0) is True
+    # EWMA has absorbed the slowdown; the same dt stops being "slow"
+    assert det.observe(2, 3.0) is False
+
+
+# --------------------------------------------------------------------------- #
+# Training loop: checkpoint / crash / restart
+# --------------------------------------------------------------------------- #
+
+
+def _step_fn(carry, batch):
+    params, opt = carry
+    return (params + batch, opt + 1), {"loss": float(batch)}
+
+
+def _batch_fn(step):
+    return np.float64(step)
+
+
+def _carry0():
+    return (np.float64(0.0), np.int64(0))
+
+
+def test_run_completes_and_commits_final_checkpoint(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    rt = TrainingRuntime(ckpt, save_every=3, async_save=False)
+    carry = rt.run(_carry0(), _step_fn, _batch_fn, n_steps=7)
+    assert rt.state.step == 7
+    assert carry[0] == sum(range(7))
+    # periodic saves at 3, 6 plus the final blocking save at 7
+    assert ckpt.latest_step() == 7
+    assert set(ckpt.committed_steps()) == {3, 6, 7}
+
+
+def test_crash_restart_resumes_from_committed_step(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    rt = TrainingRuntime(ckpt, save_every=2, async_save=False)
+    with pytest.raises(RuntimeError, match="injected fault at step 5"):
+        rt.run(_carry0(), _step_fn, _batch_fn, n_steps=10,
+               inject_fault_at=5)
+    assert rt.state.crashed == 1
+    assert ckpt.latest_step() == 4                 # last committed save
+
+    # a fresh runtime (new process) restores and finishes the run
+    rt2 = TrainingRuntime(ckpt, save_every=2, async_save=False)
+    restored = rt2.try_restore(_carry0())
+    assert restored is not None
+    carry, step = restored
+    assert step == 4 and rt2.state.step == 4 and rt2.state.resumed == 1
+    carry = rt2.run(carry, _step_fn, _batch_fn, n_steps=10)
+    # step-keyed batches: the resumed run replays exactly steps 4..9
+    assert carry[0] == sum(range(10))
+    assert rt2.state.step == 10
+
+
+def test_try_restore_without_checkpoint_returns_none(tmp_path):
+    rt = TrainingRuntime(Checkpointer(str(tmp_path)))
+    assert rt.try_restore(_carry0()) is None
+    assert rt.state.resumed == 0
+
+
+def test_metrics_callback_sees_every_step(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    rt = TrainingRuntime(ckpt, save_every=100, async_save=False)
+    seen = []
+    rt.run(_carry0(), _step_fn, _batch_fn, n_steps=4,
+           on_metrics=lambda step, m, dt, slow: seen.append(
+               (step, m["loss"], slow)))
+    assert [s for s, _, _ in seen] == [0, 1, 2, 3]
+    assert all(not slow for _, _, slow in seen)
+
+
+# --------------------------------------------------------------------------- #
+# Preemption (SIGTERM)
+# --------------------------------------------------------------------------- #
+
+
+def test_sigterm_stops_loop_and_checkpoints(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    rt = TrainingRuntime(ckpt, save_every=1000, async_save=False)
+    prev = signal.getsignal(signal.SIGTERM)
+    rt.install_preemption_handler()
+    try:
+        def step_fn(carry, batch):
+            carry, metrics = _step_fn(carry, batch)
+            if batch == 3:                         # preempted mid-run
+                os.kill(os.getpid(), signal.SIGTERM)
+            return carry, metrics
+
+        carry = rt.run(_carry0(), step_fn, _batch_fn, n_steps=100)
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+    assert rt.state.preempted is True
+    assert rt.state.step == 4                      # stopped at loop top
+    assert carry[0] == sum(range(4))
+    # the final blocking save committed the preempted state
+    assert ckpt.latest_step() == 4
+    tree, step = ckpt.restore(4, _carry0())
+    assert step == 4 and tree[0] == sum(range(4))
+
+
+# --------------------------------------------------------------------------- #
+# Elastic re-mesh restore
+# --------------------------------------------------------------------------- #
+
+
+def test_elastic_restore_applies_new_shardings(tmp_path):
+    jax = pytest.importorskip("jax")
+    ckpt = Checkpointer(str(tmp_path))
+    rt = TrainingRuntime(ckpt, save_every=5, async_save=False)
+    rt.run(_carry0(), _step_fn, _batch_fn, n_steps=5)
+
+    # restore onto "whatever mesh is available" — here a single device
+    dev = jax.devices()[0]
+    sharding = jax.sharding.SingleDeviceSharding(dev)
+    rt2 = TrainingRuntime(ckpt, save_every=5, async_save=False)
+    restored = rt2.try_restore(_carry0(),
+                               shardings=(sharding, sharding))
+    assert restored is not None
+    (params, opt), step = restored
+    assert step == 5
+    assert params.devices() == {dev}
+    assert np.asarray(params) == sum(range(5))
+    assert np.asarray(opt) == 5
+
+
+def test_runstate_defaults():
+    st = RunState()
+    assert (st.step, st.crashed, st.resumed, st.preempted) == (0, 0, 0, False)

@@ -89,8 +89,8 @@ def test_statement_domain_excludes_unused_axes():
 
 def test_validation_errors():
     pb = ProgramBuilder("bad")
-    i = pb.axis("i", 4)
-    x = pb.buffer("x", (4,))
+    pb.axis("i", 4)
+    pb.buffer("x", (4,))
     with pytest.raises(IRError):
         Program("p", (Axis("i", 4),), (Buffer("x", (4,)),),
                 (Statement(":=", Access("x", ((1,),)), Access("nope", ((1,),))),))

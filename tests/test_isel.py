@@ -1,5 +1,4 @@
 """Instruction-selection tests (paper Section 2.4)."""
-import pytest
 
 from repro.core import instructions as I
 from repro.core import kernels_ir as K

@@ -1,6 +1,5 @@
 """Pallas kernel tests: shape/dtype sweeps in interpret mode against the
 pure-jnp oracles, plus the ISAM->BlockSpec bridge."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

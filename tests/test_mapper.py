@@ -1,6 +1,4 @@
 """Deterministic mapper tests — the paper's Section 6.1 mapping claims."""
-import numpy as np
-import pytest
 
 from repro.core import instructions as I
 from repro.core import kernels_ir as K

@@ -16,19 +16,14 @@ import pytest
 from repro.compile.features import (feature_dict, feature_names,
                                     feature_vector, program_family,
                                     role_extents)
-from repro.core import instructions as I
 from repro.core import kernels_ir as K
 from repro.core.approach import GreedyApproach
-from repro.core.isel import select_instructions
 from repro.core.scheduler import schedule
 from repro.core.sysgraph import paper_accelerator, tpu_v5e
 from repro.search.cache import TuningCache, TuningRecord, set_default_cache
 from repro.search.evaluate import CostModelEvaluator, LearnedEvaluator
-from repro.search.model import (MIN_TRAIN_SAMPLES, CostModel, ModelStore,
-                                Sample, fresh_labels, harvest_cache,
-                                model_key, predict_gemm_block,
-                                set_default_store, train_family, train_suites)
-from repro.search.space import ParamApproach, SearchSpace, tuning_key
+from repro.search.model import MIN_TRAIN_SAMPLES, ModelStore, fresh_labels, harvest_cache, model_key, predict_gemm_block, set_default_store, train_family, train_suites
+from repro.search.space import SearchSpace, tuning_key
 from repro.search.strategies import hill_climb, surrogate_search
 from repro.search.tune import build_cases, tune_case
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCHS, get_config, get_smoke_config
-from repro.models import SHAPES, build_model, shape_applicable
+from repro.models import build_model, shape_applicable
 
 RNG = jax.random.PRNGKey(0)
 

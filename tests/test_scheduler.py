@@ -131,3 +131,38 @@ def test_unmapped_temp_not_materialized():
 def test_matmul_schedule_property(m, n, k, cores):
     """Any GEMM size on any core count executes to the oracle's result."""
     run_case(K.matmul(m, n, k), tpu_v5e(cores), rng_seed=m * n + k)
+
+
+def test_bytes_moved_respects_buffer_dtype():
+    """bf16 buffers move half the bytes of an f32 twin with an identical op
+    stream (regions are element ranges; dtype scaling happens at the byte
+    accounting, the cost model, and the capacity checks)."""
+    def build(dtype):
+        prog = K.matmul(256, 128, 192)
+        if dtype != "f32":
+            for b in prog.buffers:
+                object.__setattr__(b, "dtype", dtype)
+        sel = select_instructions(prog, ISA)
+        return schedule(sel, tpu_v5e(1))
+
+    f32, bf16 = build("f32"), build("bf16")
+    assert [(op.kind, op.src, op.dst) for op in f32.ops] == \
+           [(op.kind, op.src, op.dst) for op in bf16.ops]
+    assert f32.bytes_moved() == 2 * bf16.bytes_moved()
+    assert bf16.makespan < f32.makespan          # cost model sees the traffic
+    f64 = build("f64")
+    assert f64.bytes_moved() == 2 * f32.bytes_moved()
+
+
+def test_region_nbytes_uses_program_dtype():
+    prog = K.matmul(32, 32, 32)
+    for b in prog.buffers:
+        if b.name == "A":
+            object.__setattr__(b, "dtype", "bf16")
+    sel = select_instructions(prog, ISA)
+    sched = schedule(sel, tpu_v5e(1))
+    from repro.core.scheduler import Region
+    a = Region("A", ((0, 8), (0, 8)))
+    c = Region("C", ((0, 8), (0, 8)))
+    assert sched.region_nbytes(a) == 8 * 8 * 2   # bf16
+    assert sched.region_nbytes(c) == 8 * 8 * 4   # f32

@@ -10,8 +10,7 @@ import pytest
 from repro.checkpoint.ckpt import Checkpointer
 from repro.configs import get_smoke_config
 from repro.data.pipeline import DataConfig, SyntheticLM, make_source
-from repro.optim.adamw import (AdamWConfig, apply_updates, global_norm,
-                               init_opt_state, schedule)
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, schedule
 from repro.runtime.fault_tolerance import StragglerDetector, TrainingRuntime
 
 

@@ -1,7 +1,6 @@
 """IR transformation + non-deterministic search tests, incl. hypothesis
 property tests that transforms preserve semantics against the NumPy oracle."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import instructions as I
@@ -84,7 +83,8 @@ def chain_programs(draw):
     n_axes = draw(st.integers(3, 5))
     sizes = [draw(st.integers(2, 4)) for _ in range(n_axes)]
     pb = ProgramBuilder("rand")
-    axes = [pb.axis(f"a{i}", s) for i, s in enumerate(sizes)]
+    for i, s in enumerate(sizes):
+        pb.axis(f"a{i}", s)
     n_muls = draw(st.integers(2, 3))
 
     def rand_subset(min_len=1):

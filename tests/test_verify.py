@@ -1,0 +1,171 @@
+"""Tests for repro.verify: golden-clean compiles across the tune suites,
+one mutation test per corruption class, Diagnostic round-trips, the
+VerifyPass gate, and cached-payload rejection."""
+import json
+
+import pytest
+
+from repro.compile.artifact import CompileError
+from repro.compile.driver import compile_gemm, compile_selection
+from repro.search.tune import FABRIC_GEMM_SIZES, build_cases, make_graph
+from repro.verify import (ERROR, RULES, WARNING, Diagnostic,
+                          DiagnosticReport, diag, verify_artifact,
+                          verify_compile, verify_fabric)
+from repro.verify.mutate import MUTATIONS, baseline_report, run_mutation
+
+GRAPH = make_graph("tpu")
+
+
+# --------------------------------------------------------------------------- #
+# Golden: every tune-suite compile verifies clean (zero false positives)
+# --------------------------------------------------------------------------- #
+
+CASES = build_cases("all")
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c.name for c in CASES])
+def test_tune_suite_compile_verifies_clean(case):
+    art = compile_selection(case.selection, GRAPH, program=case.program)
+    report = verify_compile(selection=case.selection, schedule=art.schedule,
+                            approach=art.approach)
+    assert report.ok, report.render()
+    assert report.diagnostics == [], report.render()
+
+
+@pytest.mark.parametrize("axis", ["m", "n", "k"])
+def test_fabric_partition_verifies_clean(axis):
+    from repro.fabric.partition import partition
+    from repro.fabric.topology import make_topology
+    topo = make_topology("ring", 4)
+    pp = partition("gemm", FABRIC_GEMM_SIZES[1], axis, topo.n_chips)
+    diags = verify_fabric(pp, topo)
+    assert [d for d in diags if d.severity == ERROR] == [], \
+        "\n".join(str(d) for d in diags)
+
+
+def test_artifact_verifies_clean_end_to_end():
+    art = compile_gemm(256, 128, 192, use_cache=False)
+    report = verify_artifact(art)
+    assert report.ok and report.diagnostics == [], report.render()
+
+
+# --------------------------------------------------------------------------- #
+# Mutation harness: every corruption class is caught with its rule id
+# --------------------------------------------------------------------------- #
+
+
+def test_mutation_baseline_is_clean():
+    report = baseline_report()
+    assert report.ok and report.diagnostics == [], report.render()
+
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+def test_mutation_is_caught(name):
+    res = run_mutation(name)
+    assert res.caught, str(res)
+    # one corruption ~ one primary finding: the expected rule fires, and the
+    # report stays small (no cascade of unrelated diagnostics)
+    assert res.expected in res.rules
+    assert len(set(res.rules)) <= 3, str(res)
+
+
+def test_mutation_registry_covers_every_layer():
+    layers = {MUTATIONS[n][0].split(".", 1)[0] for n in MUTATIONS}
+    assert layers == {"prg", "sel", "sch", "fab", "art"}
+    assert len(MUTATIONS) >= 10
+
+
+# --------------------------------------------------------------------------- #
+# Diagnostics: structure + JSON round-trip
+# --------------------------------------------------------------------------- #
+
+
+def test_diag_rejects_unregistered_rule():
+    with pytest.raises(KeyError):
+        diag("prg.not-a-rule", "nope")
+
+
+def test_diagnostic_layer_derived_from_rule():
+    d = diag("sch.capacity", "too big", uid=7, subject="vmem")
+    assert d.layer == "sch" and d.severity == ERROR
+
+
+def test_diagnostic_json_round_trip():
+    d = diag("sel.axis-role", "axis j bound twice", severity=WARNING,
+             subject="mxu.matmul", uid=3)
+    d2 = Diagnostic.from_dict(json.loads(json.dumps(d.to_dict())))
+    assert d2 == d
+
+
+def test_report_json_round_trip_and_severity_split():
+    rep = DiagnosticReport(meta={"case": "gemm"})
+    rep.extend([diag("prg.bounds", "oob"),
+                diag("sch.vmem-budget", "tight", severity=WARNING)])
+    assert not rep.ok and len(rep.errors) == 1 and len(rep.warnings) == 1
+    rep2 = DiagnosticReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert rep2.diagnostics == rep.diagnostics
+    assert rep2.meta == {"case": "gemm"}
+    assert "prg.bounds" in rep.render()
+
+
+def test_rules_table_is_namespaced():
+    for rule in RULES:
+        assert rule.split(".", 1)[0] in ("prg", "sel", "sch", "fab", "art")
+
+
+# --------------------------------------------------------------------------- #
+# VerifyPass: strict by default, ctx.verify=False escapes
+# --------------------------------------------------------------------------- #
+
+
+def _corrupt_schedule(art):
+    wb = [op for op in art.schedule.ops if op.kind == "writeback"][-1]
+    art.schedule.ops = [op for op in art.schedule.ops if op.uid != wb.uid]
+    art.schedule.final_residency.pop(
+        (wb.region.buffer, wb.region.bounds), None)
+
+
+def test_verify_pass_rejects_corrupt_schedule():
+    from repro.compile.pipeline import CompileContext, VerifyPass
+    art = compile_gemm(128, 64, 96, use_cache=False)
+    _corrupt_schedule(art)
+    ctx = CompileContext(program=art.program, graph=art.graph,
+                         approach=art.approach)
+    ctx.selection, ctx.schedule = art.selection, art.schedule
+    with pytest.raises(CompileError, match="sch.output-not-home"):
+        VerifyPass().run(ctx)
+    ctx.verify = False                         # the --no-verify escape hatch
+    VerifyPass().run(ctx)
+
+
+def test_compile_selection_verify_flag():
+    case = CASES[0]
+    art = compile_selection(case.selection, GRAPH, program=case.program,
+                            verify=True)
+    assert art.cost > 0
+
+
+# --------------------------------------------------------------------------- #
+# Cache: corrupt payloads are rejected before hydration
+# --------------------------------------------------------------------------- #
+
+
+def test_cache_lookup_rejects_corrupt_payload(tmp_path, recwarn):
+    from repro.compile.cache import ArtifactCache
+    art = compile_gemm(64, 32, 48, use_cache=False)
+    path = str(tmp_path / "compiled.json")
+    cache = ArtifactCache(path)
+    cache.store(art)
+
+    fresh = ArtifactCache(path)
+    assert fresh.lookup(art.key) is not None    # intact payload hydrates
+
+    with open(path) as f:
+        payload = json.load(f)
+    payload["artifacts"][0]["cost"] = -1.0      # corrupt on disk
+    with open(path, "w") as f:
+        json.dump(payload, f)
+    poisoned = ArtifactCache(path)
+    assert poisoned.lookup(art.key) is None
+    assert any("failed payload verification" in str(w.message)
+               for w in recwarn.list)
