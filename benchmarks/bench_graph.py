@@ -1,0 +1,71 @@
+"""Graph-compilation suite: what the ``repro.graph`` tier buys — epilogue
+fusion (fewer nodes, fewer inter-kernel bytes) and artifact-cache dedupe
+(compiles issued vs graph nodes) on the traced transformer block, plus the
+unrolled-GRU dedupe-extreme chain.
+
+Every ``us_per_call`` is the **deterministic modeled** end-to-end makespan
+of the graph schedule on the event simulator (microseconds) — stable
+across machines, so the CI perf gate can hold these rows to its tight
+tolerance.  Wall-clock compile times and cache effects are reported in
+``derived`` only.
+
+CSV: name, us_per_call = modeled graph makespan (us), derived =
+"nodes=<n>/compiles=<c>/dedupe=<x>/edge=<B>/hbm=<B>[/saved=<B>]".
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from repro.compile.cache import ArtifactCache
+from repro.configs.registry import get_trace_config
+from repro.graph.compile import compile_graph
+from repro.graph.fuse import fuse_epilogues
+from repro.graph.trace import trace_block, trace_gru_chain
+
+ARCH = "olmo-1b"
+SEQ = 8
+
+
+def _row(name: str, cg, extra: str = "") -> tuple[str, float, str]:
+    s = cg.stats
+    derived = (f"nodes={s['nodes']}/compiles={s['unique_programs']}/"
+               f"dedupe={s['dedupe']}/edge={cg.edge_bytes}/"
+               f"hbm={cg.hbm_bytes}")
+    return name, cg.makespan * 1e6, derived + extra
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    cfg = get_trace_config(ARCH)
+    unfused = trace_block(cfg, seq_len=SEQ)
+    fused, decisions = fuse_epilogues(trace_block(cfg, seq_len=SEQ))
+
+    cg_un = compile_graph(unfused, use_cache=False)
+    rows.append(_row("graph_block_unfused", cg_un))
+
+    cg_f = compile_graph(fused, use_cache=False, decisions=decisions)
+    saved = sum(d.saved_bytes for d in decisions)
+    rows.append(_row("graph_block_fused", cg_f, f"/saved={saved}"))
+
+    # cache round-trip: cold populate then a warm compile that must be all
+    # hits; wall times go to derived only (machine-dependent).
+    with tempfile.TemporaryDirectory() as d:
+        cache = ArtifactCache(os.path.join(d, "arts.json"))
+        t0 = time.perf_counter()
+        compile_graph(fused, cache=cache, decisions=decisions)
+        cold_s = time.perf_counter() - t0
+        from repro.compile.driver import clear_memo
+        clear_memo()
+        t0 = time.perf_counter()
+        cg_w = compile_graph(fused, cache=ArtifactCache(cache.path),
+                             decisions=decisions)
+        warm_s = time.perf_counter() - t0
+    rows.append(_row("graph_block_fused_cached", cg_w,
+                     f"/hits={cg_w.stats['cache_hits']}"
+                     f"/cold={cold_s:.3f}s/warm={warm_s:.3f}s"))
+
+    cg_g = compile_graph(trace_gru_chain(), use_cache=False)
+    rows.append(_row("graph_gru_chain", cg_g))
+    return rows

@@ -13,9 +13,9 @@ the baseline JSON must reappear (matched by suite + name) with
 value.  Missing rows and regressions fail the run (exit 1) with one line per
 violation; new rows not in the baseline are reported but pass — they become
 part of the baseline when it is next regenerated.  CI gates the
-deterministic modeled-cost suites (``tuned``, ``fabric``) against the
-committed ``benchmarks/baselines/BENCH_ci.json``; see README for how to
-update it.
+deterministic modeled-cost suites (``tuned``, ``fabric``, ``graph``)
+against the committed ``benchmarks/baselines/BENCH_ci.json``; see README
+for how to update it.
 
 A suite that yields **zero rows** is an error (exit 1), not a pass — the
 gate must never go green on vacuous output.
@@ -45,6 +45,8 @@ SUITES = {
               "repro.search autotuner vs GreedyApproach (DeepBench GEMMs)"),
     "fabric": ("bench_fabric",
                "repro.fabric 2/4/8-chip strong scaling (DeepBench GEMMs)"),
+    "graph": ("bench_graph",
+              "repro.graph whole-block compilation (fusion + dedupe)"),
 }
 
 

@@ -3,6 +3,7 @@
     repro tune --suite gemm --trials 32        # repro.search.tune
     repro model train --suite gemm,conv ...    # repro.search.model
     repro compile --suite smoke --validate     # repro.compile
+    repro graph --validate --cache arts.json   # repro.graph (CompiledGraph)
     repro fabric --shape 5124x700x2048 ...     # repro.fabric.simulate
     repro dryrun --all --mesh both             # repro.launch.dryrun
     repro train / repro serve                  # repro.launch.{train,serve}
@@ -25,6 +26,8 @@ COMMANDS = {
     "compile": ("repro.compile.__main__", "compilation driver CLI"),
     "verify": ("repro.verify.cli", "static analyzer sweep + mutation "
                                    "harness"),
+    "graph": ("repro.graph.__main__", "whole-model graph trace/fuse/"
+                                      "compile"),
     "fabric": ("repro.fabric.simulate", "multi-chip fabric simulator"),
     "dryrun": ("repro.launch.dryrun", "dry-run roofline matrix"),
     "train": ("repro.launch.train", "training launch"),

@@ -39,6 +39,16 @@ def get_smoke_config(arch: str) -> ModelConfig:
     return _module(arch).smoke_config()
 
 
+def get_trace_config(arch: str) -> ModelConfig:
+    """A scaled-down config sized for the graph tracer (``repro.graph``):
+    one layer, dense-block dims small enough for the NumPy oracle, and a
+    power-of-4 head_dim so the attention score scale is exact (see
+    ``repro.graph.trace``)."""
+    return get_config(arch).scaled(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab_size=64, n_experts=0, remat=False)
+
+
 def input_specs(cfg: ModelConfig, shape: ShapeConfig,
                 for_train: bool | None = None) -> dict:
     """ShapeDtypeStruct stand-ins for every model input of this cell —

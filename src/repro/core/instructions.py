@@ -145,7 +145,8 @@ def tpu_isa(include_fused: bool = True) -> list[Program]:
     isa.append(mxu_matmul())
     isa.append(vpu_dot())
     isa += [vpu_binary(op) for op in ("*=", "+=", "-=", "max=")]
-    for fn in ("sigmoid", "tanh", "relu", "exp", "sub_from_one", "neg", "recip"):
+    for fn in ("sigmoid", "tanh", "relu", "exp", "sub_from_one", "neg",
+               "recip", "halve"):
         isa.append(vpu_unary(fn))
         isa.append(vpu_unary_inplace(fn))
     isa += [vpu_reduce("+="), vpu_reduce("max="), vpu_copy()]

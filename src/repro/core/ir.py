@@ -41,6 +41,7 @@ UNARY_FNS: dict[str, Callable[[np.ndarray], np.ndarray]] = {
     "neg": np.negative,
     "recip": lambda x: 1.0 / x,
     "sub_from_one": lambda x: 1.0 - x,  # common in gates: (1 - z)
+    "halve": lambda x: 0.5 * x,  # exact in binary fp: attention 1/sqrt(d)
     "id": lambda x: x,
 }
 

@@ -542,3 +542,137 @@ def search_mappings(haystack: Program, needle: Program, max_depth: int = 3,
         if not frontier:
             break
     return results
+
+
+# --------------------------------------------------------------------------- #
+# Epilogue fusion (the graph tier's producer+consumer composition)
+# --------------------------------------------------------------------------- #
+
+
+def _is_identity_access(prog: Program, acc: Access) -> bool:
+    """True iff dim d of the access reads axis d directly (the elementwise
+    same-shape pattern): identity coefficient matrix over a prefix of the
+    program axes, zero offsets."""
+    if any(o != 0 for o in acc.offset):
+        return False
+    for d, row in enumerate(acc.matrix):
+        for a, coeff in enumerate(row):
+            if coeff != (1 if a == d else 0):
+                return False
+    return True
+
+
+def _output_axes(prog: Program, out: str) -> list[str]:
+    """The program axes indexing each dim of output buffer ``out`` — every
+    access of ``out`` must agree and use exactly one axis per dim."""
+    axes: list[str] | None = None
+    for s in prog.statements:
+        for acc in (s.lhs, s.rhs):
+            if acc.buffer != out:
+                continue
+            cur = []
+            for row, off in zip(acc.matrix, acc.offset):
+                hits = [a for a, c in enumerate(row) if c]
+                if off != 0 or len(hits) != 1 or row[hits[0]] != 1:
+                    raise IRError(
+                        f"{prog.name}: output {out} access is not "
+                        f"axis-aligned; cannot fuse an epilogue onto it")
+                cur.append(prog.axis_names[hits[0]])
+            if axes is None:
+                axes = cur
+            elif axes != cur:
+                raise IRError(
+                    f"{prog.name}: output {out} accessed with inconsistent "
+                    f"axis order")
+    if axes is None:
+        raise IRError(f"{prog.name}: output {out} is never accessed")
+    return axes
+
+
+def fuse_epilogue(producer: Program, consumer: Program, wire: str,
+                  name: str | None = None,
+                  return_map: bool = False):
+    """Fold an elementwise ``consumer`` program into ``producer``.
+
+    ``wire`` names the consumer buffer fed by the producer's (single)
+    output.  The composed program applies the consumer's statements directly
+    to the producer's output buffer — the graph tier's generalization of the
+    conv→matmul extraction idiom: compose programs, let instruction
+    selection cover the result with fused/VPU needles.
+
+    Supported consumer shapes (everything ``repro.graph.trace`` emits):
+
+      * unary chains starting from ``wire`` — ``O := fn(W); O := fn(O); ...``
+      * copy-accumulate — ``O := W; O op= B; ...``
+      * accumulate-into — ``O := B; O op= W`` with commutative ``op``
+        (rewritten as ``C op= B``, valid because C already holds W's value)
+
+    Raises ``IRError`` when the consumer does not match (the fusion pass
+    treats that as "not fusable", not as an error).
+    """
+    if len(producer.outputs) != 1 or len(consumer.outputs) != 1:
+        raise IRError("epilogue fusion needs single-output programs")
+    c_name = producer.outputs[0]
+    out = consumer.outputs[0]
+    if wire == out or wire not in {b.name for b in consumer.buffers}:
+        raise IRError(f"bad wire buffer {wire!r}")
+    c_buf = producer.buffer(c_name)
+    c_axes = _output_axes(producer, c_name)
+    ax_index = {a: i for i, a in enumerate(producer.axis_names)}
+
+    # the consumer must be pure elementwise over the producer-output shape
+    if tuple(a.size for a in consumer.axes) != tuple(c_buf.shape):
+        raise IRError("consumer iteration space != producer output shape")
+    for s in consumer.statements:
+        for acc in (s.lhs, s.rhs):
+            if not _is_identity_access(consumer, acc):
+                raise IRError("consumer access is not identity/elementwise")
+    for b in consumer.buffers:
+        if tuple(b.shape) != tuple(c_buf.shape):
+            raise IRError("consumer buffer shape != producer output shape")
+    if sum(s.rhs.buffer == wire for s in consumer.statements) != 1:
+        raise IRError("wire buffer must be read exactly once")
+
+    # rename consumer buffers into the producer namespace
+    taken = {b.name for b in producer.buffers}
+    rename = {wire: c_name, out: c_name}
+    extra: list[Buffer] = []
+    for b in consumer.buffers:
+        if b.name in rename:
+            continue
+        nn, i = b.name, 0
+        while nn in taken:
+            i += 1
+            nn = f"{b.name}_e{i}"
+        taken.add(nn)
+        rename[b.name] = nn
+        extra.append(Buffer(nn, tuple(b.shape), b.dtype, b.temp))
+
+    mat = tuple(tuple(1 if a == ax_index[c_axes[d]] else 0
+                      for a in range(len(producer.axes)))
+                for d in range(len(c_axes)))
+
+    def remap(acc: Access) -> Access:
+        return Access(rename[acc.buffer], mat)
+
+    stmts = list(consumer.statements)
+    epilogue: list[Statement] = []
+    if stmts and stmts[0].rhs.buffer != wire:
+        # accumulate-into: O := B; O op= W  ->  C op= B
+        if (len(stmts) != 2 or stmts[0].op != ":="
+                or stmts[1].rhs.buffer != wire
+                or stmts[1].op not in ("+=", "*=", "max=")):
+            raise IRError("unsupported epilogue shape")
+        epilogue.append(Statement(stmts[1].op, remap(stmts[1].lhs),
+                                  remap(stmts[0].rhs)))
+    else:
+        for i, s in enumerate(stmts):
+            if i == 0 and s.op == ":=":
+                continue                      # O := W — C already holds it
+            epilogue.append(Statement(s.op, remap(s.lhs), remap(s.rhs),
+                                      s.fn))
+
+    fused = Program(name or f"{producer.name}+{consumer.name}",
+                    producer.axes, producer.buffers + tuple(extra),
+                    producer.statements + tuple(epilogue), producer.outputs)
+    return (fused, dict(rename)) if return_map else fused

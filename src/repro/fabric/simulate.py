@@ -473,6 +473,84 @@ def replicate_output(pp: PartitionedProgram) -> PartitionedProgram:
 
 
 # --------------------------------------------------------------------------- #
+# Graph-level replay (repro.graph)
+# --------------------------------------------------------------------------- #
+
+
+def simulate_kernel_graph(kgraph, node_costs: dict, residency: dict,
+                          graph: SystemGraph | None = None) -> dict:
+    """Replay a compiled ``repro.graph.KernelGraph`` on one chip's event
+    timeline: every node is a compute task (duration = its kernel's modeled
+    makespan), and inter-kernel tensors turn into DMA tasks on the HBM→VMEM
+    edge according to ``residency``:
+
+      * graph inputs stream in once over the DMA edge (weight-stationary:
+        they stay resident for every consumer);
+      * an intermediate placed ``"vmem"`` is handed to consumers directly —
+        the compute task dependency alone, no traffic;
+      * an intermediate placed ``"hbm"`` (spilled by ``plan_placement``) is
+        stored once after its producer and re-loaded per consumer;
+      * graph outputs are written back to HBM.
+
+    ``node_costs`` maps node name → seconds.  Returns the makespan, the
+    modeled HBM traffic in bytes, and the auditable ``(tid, deps)`` task
+    pairs (``repro.verify.fabric.verify_task_graph`` checks them — the
+    same acyclicity/unknown-dep rules the collective timelines obey).
+    """
+    from ..core.sysgraph import tpu_v5e
+    g = graph if graph is not None else tpu_v5e(1)
+    vmem = max(g.memories.values(), key=lambda m: m.level)
+    feed = next(e for e in g.edges
+                if e.dst == vmem.name
+                and g.memories[e.src].level == vmem.level - 1)
+    core = next(c for c in g.computes.values() if c.memory == vmem.name)
+    dma = f"{feed.src}->{feed.dst}"
+
+    def xfer(nbytes: int) -> float:
+        return feed.latency + nbytes / feed.bandwidth
+
+    sim = EventSim()
+    produced_by: dict[str, str] = {}          # tensor -> producing task id
+    hbm_bytes = 0
+    spilled = {t for t, loc in residency.items() if loc == "hbm"}
+    for t in kgraph.inputs:
+        sim.add(f"load:{t}", resource=dma,
+                duration=xfer(kgraph.tensors[t].nbytes))
+        produced_by[t] = f"load:{t}"
+        hbm_bytes += kgraph.tensors[t].nbytes
+    for node in kgraph.nodes:
+        deps = []
+        for t in node.consumed():
+            if t in spilled:
+                tid = f"load:{t}:{node.name}"
+                sim.add(tid, resource=dma,
+                        duration=xfer(kgraph.tensors[t].nbytes),
+                        deps=(f"store:{t}",))
+                hbm_bytes += kgraph.tensors[t].nbytes
+                deps.append(tid)
+            else:
+                deps.append(produced_by[t])
+        sim.add(node.name, resource=core.name,
+                duration=float(node_costs[node.name]), deps=tuple(deps))
+        for t in node.produced():
+            produced_by[t] = node.name
+            if t in spilled:
+                sim.add(f"store:{t}", resource=dma,
+                        duration=xfer(kgraph.tensors[t].nbytes),
+                        deps=(node.name,))
+                hbm_bytes += kgraph.tensors[t].nbytes
+    for t in kgraph.outputs:
+        sim.add(f"store:out:{t}", resource=dma,
+                duration=xfer(kgraph.tensors[t].nbytes),
+                deps=(produced_by[t],))
+        hbm_bytes += kgraph.tensors[t].nbytes
+    times = sim.run()
+    makespan = max((end for _, end in times.values()), default=0.0)
+    return {"makespan": makespan, "hbm_bytes": hbm_bytes,
+            "n_tasks": len(sim._tasks), "tasks": sim.tasks, "times": times}
+
+
+# --------------------------------------------------------------------------- #
 # Search integration
 # --------------------------------------------------------------------------- #
 

@@ -11,6 +11,8 @@ severity, offending op/statement, message) instead of bare exceptions:
      versioned regions: RAW/WAR/WAW hazards, capacity, residency
   4. **fabric**    (``fab.*``) — collective/task-graph acyclicity and the
      sharded-output partition contract
+  5. **graph**     (``gra.*``) — ``repro.graph`` kernel-graph wiring,
+     topology, per-node program health, and placement capacity
 
 plus structural checks on cached artifact payloads (``art.*``).
 
@@ -25,6 +27,7 @@ from .diagnostics import (ERROR, RULES, WARNING, Diagnostic,
                           DiagnosticReport, VerifyError, diag)
 from .fabric import (verify_collective, verify_fabric, verify_partition,
                      verify_task_graph)
+from .graph import verify_graph, verify_placement
 from .program import verify_program
 from .schedule import verify_schedule
 from .selection import verify_selection
@@ -34,7 +37,7 @@ __all__ = [
     "WARNING", "diag", "verify_program", "verify_selection",
     "verify_schedule", "verify_collective", "verify_partition",
     "verify_task_graph", "verify_fabric", "verify_artifact_dict",
-    "verify_compile", "verify_artifact",
+    "verify_graph", "verify_placement", "verify_compile", "verify_artifact",
 ]
 
 

@@ -1,6 +1,6 @@
 """``repro verify`` — run the static analyzer over the tune suites.
 
-    repro verify                          # gemm+gru+conv+fabric, greedy
+    repro verify                          # gemm+gru+conv+fabric+graph
     repro verify --suite gemm,conv        # subset
     repro verify --tuned                  # also check tuned configs (cache)
     repro verify --mutate                 # prove the rules fire (harness)
@@ -16,7 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 
-SUITES = ("gemm", "gru", "conv", "fabric")
+SUITES = ("gemm", "gru", "conv", "fabric", "graph")
 
 
 def _verify_suite_cases(suite: str, limit, tuned: bool, rows: list) -> int:
@@ -65,6 +65,34 @@ def _verify_fabric_cases(limit, rows: list) -> int:
             report.extend(verify_fabric(pp, topo))
             name = "fabric_gemm_{}_{}".format("x".join(map(str, shape)), axis)
             failures += _emit(name, report, rows)
+    return failures
+
+
+def _verify_graph_cases(limit, rows: list) -> int:
+    """The graph layer: traced kernel graphs (fused and unfused) plus their
+    placement plans must verify clean under the ``gra.*`` rules."""
+    from ..configs.registry import get_trace_config
+    from ..graph.compile import RESIDENCY_FRAC, plan_placement
+    from ..graph.fuse import fuse_epilogues
+    from ..graph.trace import trace_block, trace_gru_chain
+    from ..core.sysgraph import V5E_VMEM_BYTES
+    from . import DiagnosticReport, verify_graph, verify_placement
+    failures = 0
+    cases = [("block_unfused",
+              lambda: trace_block(get_trace_config("olmo-1b"), seq_len=8)),
+             ("block_fused",
+              lambda: fuse_epilogues(
+                  trace_block(get_trace_config("olmo-1b"), seq_len=8))[0]),
+             ("gru_chain", trace_gru_chain)]
+    budgets = (int(V5E_VMEM_BYTES * RESIDENCY_FRAC), 4096)
+    for name, build in cases[:limit] if limit else cases:
+        g = build()
+        report = DiagnosticReport()
+        report.extend(verify_graph(g))
+        for budget in budgets:
+            pl = plan_placement(g, budget)
+            report.extend(verify_placement(g, pl.locations, budget))
+        failures += _emit(f"graph_{name}", report, rows)
     return failures
 
 
@@ -140,6 +168,8 @@ def main(argv=None) -> int:
     for suite in suites:
         if suite == "fabric":
             failures += _verify_fabric_cases(args.limit, rows)
+        elif suite == "graph":
+            failures += _verify_graph_cases(args.limit, rows)
         else:
             failures += _verify_suite_cases(suite, args.limit, args.tuned,
                                             rows)

@@ -8,7 +8,7 @@ statement index, a buffer or node name) and a human message.  A
 error-severity findings* (warnings surface but do not fail a compile).
 
 Rule ids are namespaced by layer (``prg.*``, ``sel.*``, ``sch.*``,
-``fab.*``, ``art.*``) and registered in ``RULES`` so the CLI, the mutation
+``fab.*``, ``gra.*``, ``art.*``) and registered in ``RULES`` so the CLI, the mutation
 harness and the README rule table all speak from one source.
 """
 from __future__ import annotations
@@ -60,6 +60,20 @@ RULES: dict[str, str] = {
     "fab.chain-broken": "reduce chains must visit all chips exactly once",
     "fab.contract": "per-chip shards must satisfy the sharded-output "
                     "contract",
+    # graph verifier (verify/graph.py)
+    "gra.unknown-tensor": "node wiring must reference declared tensors and "
+                          "program buffers",
+    "gra.shape": "a wired tensor's shape must match its program buffer",
+    "gra.dtype": "a wired tensor's dtype must match its program buffer",
+    "gra.cycle": "nodes must only consume tensors produced earlier "
+                 "(acyclic, topologically ordered)",
+    "gra.duplicate-producer": "every tensor must have at most one producer",
+    "gra.output": "graph outputs must be produced and wired output buffers "
+                  "must be program outputs",
+    "gra.node-program": "every node's kernel program must verify clean "
+                        "(prg.* layer)",
+    "gra.capacity": "vmem-resident live tensors must fit the placement "
+                    "budget",
     # artifact payload checks (cached loads, verify/artifact.py)
     "art.schema": "artifact payloads must carry the known schema/fields",
     "art.instr-plan": "tile plans must be role-consistent and positive",

@@ -43,6 +43,9 @@ class Bundle:
     topo: object = None
     steps: dict = field(default_factory=dict)   # collective kind -> steps
     tasks: list = field(default_factory=list)   # EventSim (tid, deps) pairs
+    kgraph: object = None                 # repro.graph KernelGraph
+    locations: dict = field(default_factory=dict)  # tensor -> vmem|hbm
+    budget: int = 0
 
 
 _BASE: dict[str, Bundle] = {}
@@ -81,6 +84,21 @@ def _fabric_bundle() -> Bundle:
     return copy.deepcopy(_BASE["fabric"])
 
 
+def _graph_bundle() -> Bundle:
+    if "graph" not in _BASE:
+        from ..configs.registry import get_trace_config
+        from ..graph.compile import plan_placement
+        from ..graph.fuse import fuse_epilogues
+        from ..graph.trace import trace_block
+        g, _ = fuse_epilogues(
+            trace_block(get_trace_config("olmo-1b"), seq_len=4))
+        budget = 4096    # small enough that the plan mixes vmem and hbm
+        pl = plan_placement(g, budget)
+        _BASE["graph"] = Bundle(kgraph=g, locations=dict(pl.locations),
+                                budget=budget)
+    return copy.deepcopy(_BASE["graph"])
+
+
 # --------------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------------- #
@@ -109,6 +127,10 @@ def _verify_bundle(b: Bundle) -> list[Diagnostic]:
         diags.extend(verify_selection(b.selection, b.approach))
     if b.schedule is not None:
         diags.extend(verify_schedule(b.schedule, b.approach))
+    if b.kgraph is not None:
+        from .graph import verify_graph, verify_placement
+        diags.extend(verify_graph(b.kgraph))
+        diags.extend(verify_placement(b.kgraph, b.locations, b.budget))
     return diags
 
 
@@ -336,6 +358,61 @@ def _mut_fab_drop_shard(b: Bundle):
     return verify_partition(pp)
 
 
+# -- graph layer ------------------------------------------------------------ #
+
+
+@mutation("gra-cycle", "gra.cycle", kind="graph")
+def _mut_gra_cycle(b: Bundle):
+    # Rotate the last node to the front: it now consumes intermediates that
+    # are only produced later.
+    g = b.kgraph
+    g.nodes = (g.nodes[-1],) + g.nodes[:-1]
+
+
+@mutation("gra-shape-mismatch", "gra.shape", kind="graph")
+def _mut_gra_shape(b: Bundle):
+    g = b.kgraph
+    t = g.nodes[0].produced()[0]
+    spec = g.tensors[t]
+    object.__setattr__(spec, "shape", tuple(s + 1 for s in spec.shape))
+
+
+@mutation("gra-dtype-mismatch", "gra.dtype", kind="graph")
+def _mut_gra_dtype(b: Bundle):
+    g = b.kgraph
+    t = g.nodes[0].produced()[0]
+    object.__setattr__(g.tensors[t], "dtype", "bf16")
+
+
+@mutation("gra-ghost-tensor", "gra.unknown-tensor", kind="graph")
+def _mut_gra_ghost(b: Bundle):
+    node = b.kgraph.nodes[0]
+    (buf, _), *rest = node.inputs
+    object.__setattr__(node, "inputs", ((buf, "GHOST"), *rest))
+
+
+@mutation("gra-duplicate-producer", "gra.duplicate-producer", kind="graph")
+def _mut_gra_dup_producer(b: Bundle):
+    g = b.kgraph
+    twin = copy.deepcopy(g.nodes[0])
+    object.__setattr__(twin, "name", g.nodes[0].name + "_twin")
+    g.nodes = g.nodes + (twin,)
+
+
+@mutation("gra-node-program", "gra.node-program", kind="graph")
+def _mut_gra_node_program(b: Bundle):
+    # Corrupt one node's kernel program (out-of-bounds access): the prg.*
+    # layer fires inside the graph sweep and surfaces as gra.node-program.
+    s = b.kgraph.nodes[0].program.statements[0]
+    object.__setattr__(s.rhs, "offset", tuple(o + 10_000 for o in s.rhs.offset))
+
+
+@mutation("gra-over-budget", "gra.capacity", kind="graph")
+def _mut_gra_over_budget(b: Bundle):
+    b.locations = {t: "vmem" for t in b.locations}
+    b.budget = 1
+
+
 # -- artifact payloads ------------------------------------------------------ #
 
 
@@ -386,9 +463,13 @@ class MutationResult:
                f"got {sorted(set(self.rules)) or 'nothing'}"
 
 
+_BUNDLES = {"gemm": _gemm_bundle, "fabric": _fabric_bundle,
+            "graph": _graph_bundle}
+
+
 def run_mutation(name: str) -> MutationResult:
     rule, kind, fn = MUTATIONS[name]
-    bundle = _gemm_bundle() if kind == "gemm" else _fabric_bundle()
+    bundle = _BUNDLES[kind]()
     diags = fn(bundle)
     if diags is None:                       # mutator corrupted in place
         diags = _verify_bundle(bundle)
@@ -409,4 +490,5 @@ def baseline_report() -> DiagnosticReport:
     from .fabric import verify_partition, verify_task_graph
     report.extend(verify_partition(fb.partition))
     report.extend(verify_task_graph(fb.tasks))
+    report.extend(_verify_bundle(_graph_bundle()))
     return report

@@ -1,0 +1,279 @@
+"""Tests for ``repro.graph`` — graph IR, tracing, fusion, and graph-level
+compilation to a ``CompiledGraph`` artifact.
+
+The load-bearing contract: the traced block's interpreted output, its
+per-node *executed* replay, and the plain-jax reference
+(``repro.models.traceable``) are **bit-exact** — fused or not — because
+every traced op is exact over the ternary oracle inputs in any summation
+order (see ``repro.graph.trace``).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.compile.cache import ArtifactCache
+from repro.compile.driver import clear_memo
+from repro.configs.registry import get_trace_config
+from repro.graph import (CompiledGraph, GraphError, KernelGraph,
+                         assert_exactness_bound, block_inputs, compile_graph,
+                         edge_bytes, fuse_epilogues, interpret_graph,
+                         plan_placement, trace_block, trace_gru_chain)
+from repro.models.traceable import block_reference
+
+SEQ = 8
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_trace_config("olmo-1b")
+
+
+@pytest.fixture(scope="module")
+def unfused(cfg):
+    return trace_block(cfg, seq_len=SEQ)
+
+
+@pytest.fixture(scope="module")
+def fused(cfg):
+    return fuse_epilogues(trace_block(cfg, seq_len=SEQ))
+
+
+@pytest.fixture(scope="module")
+def oracle(cfg, unfused):
+    inputs = block_inputs(unfused)
+    return inputs, block_reference(inputs, cfg, SEQ)
+
+
+@pytest.fixture(scope="module")
+def compiled(fused):
+    g, decisions = fused
+    return compile_graph(g, use_cache=False, decisions=decisions)
+
+
+@pytest.fixture(scope="module")
+def compiled_unfused(unfused):
+    return compile_graph(unfused, use_cache=False)
+
+
+# --------------------------------------------------------------------------- #
+# Graph IR
+# --------------------------------------------------------------------------- #
+
+
+def test_graph_json_round_trip(unfused):
+    d = json.loads(json.dumps(unfused.to_dict()))
+    rt = KernelGraph.from_dict(d)
+    assert rt.fingerprint() == unfused.fingerprint()
+    assert len(rt.nodes) == len(unfused.nodes)
+    assert rt.nodes[0].program.statements == unfused.nodes[0].program.statements
+
+
+def test_tracer_deterministic(cfg, unfused):
+    again = trace_block(cfg, seq_len=SEQ)
+    assert again.fingerprint() == unfused.fingerprint()
+
+
+def test_validate_rejects_topological_violations(unfused):
+    g = KernelGraph.from_dict(unfused.to_dict())
+    g.nodes = (g.nodes[-1],) + g.nodes[:-1]
+    with pytest.raises(GraphError):
+        g.validate()
+
+
+def test_validate_rejects_shape_mismatch(unfused):
+    d = unfused.to_dict()
+    d["tensors"][0]["shape"] = [3, 5]
+    with pytest.raises(GraphError):
+        KernelGraph.from_dict(d)
+
+
+def test_trace_rejects_non_power_of_4_head_dim(cfg):
+    with pytest.raises(GraphError):
+        trace_block(cfg.scaled(n_heads=4, head_dim=8), seq_len=SEQ)
+
+
+# --------------------------------------------------------------------------- #
+# Oracle exactness
+# --------------------------------------------------------------------------- #
+
+
+def test_interpreted_bit_exact_vs_jax(unfused, oracle):
+    inputs, ref = oracle
+    out = interpret_graph(unfused, inputs)
+    assert all(np.array_equal(v, ref) for v in out.values())
+
+
+def test_exactness_bound_holds(unfused, oracle):
+    inputs, _ = oracle
+    env = interpret_graph(unfused, inputs, return_all=True)
+    worst = assert_exactness_bound(env)
+    assert 0 < worst < float(1 << 24)
+
+
+# --------------------------------------------------------------------------- #
+# Fusion
+# --------------------------------------------------------------------------- #
+
+
+def test_fusion_folds_every_elementwise_node(unfused, fused):
+    g, decisions = fused
+    assert len(g.nodes) < len(unfused.nodes)
+    assert not any(n.kind == "elementwise" for n in g.nodes)
+    assert len(decisions) == len(unfused.nodes) - len(g.nodes)
+
+
+def test_fusion_reduces_edge_bytes(unfused, fused):
+    g, decisions = fused
+    assert edge_bytes(g) < edge_bytes(unfused)
+    saved = sum(d.saved_bytes for d in decisions)
+    assert edge_bytes(unfused) - edge_bytes(g) == saved
+
+
+def test_fused_bit_exact(fused, oracle):
+    g, _ = fused
+    inputs, ref = oracle
+    out = interpret_graph(g, inputs)
+    assert all(np.array_equal(v, ref) for v in out.values())
+
+
+def test_fusion_deterministic(cfg, fused):
+    g, _ = fused
+    again, _ = fuse_epilogues(trace_block(cfg, seq_len=SEQ))
+    assert again.fingerprint() == g.fingerprint()
+
+
+# --------------------------------------------------------------------------- #
+# Graph compilation
+# --------------------------------------------------------------------------- #
+
+
+def test_dedupe_at_least_2x(compiled_unfused):
+    s = compiled_unfused.stats
+    assert s["unique_programs"] < s["nodes"]
+    assert s["dedupe"] >= 2.0
+    assert s["gemm_nodes"] >= 2 * s["unique_gemm_programs"]
+
+
+def test_gru_chain_dedupes_to_one_compile():
+    cg = compile_graph(trace_gru_chain(), use_cache=False)
+    assert cg.stats == {**cg.stats, "nodes": 4, "unique_programs": 1}
+    assert cg.stats["dedupe"] == 4.0
+
+
+def test_executed_bit_exact(compiled, compiled_unfused, oracle):
+    inputs, ref = oracle
+    for cg in (compiled, compiled_unfused):
+        out = cg.execute(inputs)
+        assert all(np.array_equal(v, ref) for v in out.values())
+
+
+def test_fusion_improves_makespan_and_nodes(compiled, compiled_unfused):
+    assert compiled.makespan < compiled_unfused.makespan
+    assert compiled.edge_bytes < compiled_unfused.edge_bytes
+
+
+def test_artifact_cache_second_compile_all_hits(fused, tmp_path):
+    g, _ = fused
+    cache = ArtifactCache(os.fspath(tmp_path / "arts.json"))
+    cold = compile_graph(g, cache=cache)
+    assert cold.stats["fresh_compiles"] == cold.stats["unique_programs"]
+    clear_memo()
+    warm = compile_graph(g, cache=ArtifactCache(cache.path))
+    assert warm.stats["fresh_compiles"] == 0
+    assert warm.stats["cache_hits"] == warm.stats["unique_programs"]
+    assert warm.makespan == cold.makespan
+
+
+def test_compiled_graph_json_round_trip(compiled, oracle):
+    inputs, ref = oracle
+    d = json.loads(json.dumps(compiled.to_dict()))
+    rt = CompiledGraph.from_dict(d)
+    assert rt.graph_fp == compiled.graph_fp
+    assert rt.makespan == compiled.makespan
+    assert rt.stats == compiled.stats
+    rt.ensure_kernels(use_cache=False)
+    out = rt.execute(inputs)
+    assert all(np.array_equal(v, ref) for v in out.values())
+
+
+# --------------------------------------------------------------------------- #
+# Placement
+# --------------------------------------------------------------------------- #
+
+
+def test_placement_all_resident_under_big_budget(unfused):
+    pl = plan_placement(unfused, 1 << 26)
+    assert not pl.spilled()
+    assert pl.peak_vmem <= pl.budget
+
+
+def test_placement_spills_under_tiny_budget(unfused):
+    pl = plan_placement(unfused, 1024)
+    assert pl.spilled()
+    assert pl.peak_vmem <= 1024
+
+
+def test_spilling_costs_makespan_and_hbm(unfused, compiled_unfused):
+    spilled = compile_graph(unfused, use_cache=False, vmem_budget=1024)
+    assert spilled.makespan > compiled_unfused.makespan
+    assert spilled.hbm_bytes > compiled_unfused.hbm_bytes
+
+
+def test_verify_placement_catches_over_budget(unfused):
+    from repro.verify import verify_graph, verify_placement
+    assert verify_graph(unfused) == []
+    pl = plan_placement(unfused, 1 << 26)
+    assert verify_placement(unfused, pl.locations, pl.budget) == []
+    bad = {t: "vmem" for t in pl.locations}
+    diags = verify_placement(unfused, bad, 1)
+    assert any(d.rule == "gra.capacity" for d in diags)
+
+
+# --------------------------------------------------------------------------- #
+# Verify layer + mutation harness
+# --------------------------------------------------------------------------- #
+
+
+def test_graph_mutations_all_caught():
+    from repro.verify.mutate import MUTATIONS, run_mutation
+    graph_muts = [n for n, (_, kind, _) in MUTATIONS.items()
+                  if kind == "graph"]
+    assert len(graph_muts) >= 3
+    for name in graph_muts:
+        res = run_mutation(name)
+        assert res.caught, f"{name}: expected {res.expected}, got {res.rules}"
+
+
+def test_graph_verify_suite_clean(capsys):
+    from repro.verify.cli import main
+    assert main(["--suite", "graph"]) == 0
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+
+
+def test_cli_json_payload(tmp_path):
+    from repro.graph.__main__ import main
+    report = tmp_path / "report.json"
+    rc = main(["--validate", "--json", os.fspath(report)])
+    assert rc == 0
+    payload = json.loads(report.read_text())
+    assert payload["schema"] == 1
+    assert payload["failures"] == 0
+    assert payload["validated"] is True
+    assert payload["stats"]["dedupe"] > 1.0
+    assert payload["makespan"] > 0
+
+
+def test_cli_expect_cached_fails_cold(tmp_path):
+    from repro.graph.__main__ import main
+    clear_memo()
+    rc = main(["--cache", os.fspath(tmp_path / "arts.json"),
+               "--expect-cached"])
+    assert rc == 1
