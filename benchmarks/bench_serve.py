@@ -1,0 +1,77 @@
+"""Serving suite: p50/p99 latency and goodput-vs-load for the online
+continuous-batching scheduler vs the one-shot static baseline
+(``repro.serve``), on a seeded workload against the warmed bucket lattice.
+
+Every ``us_per_call`` is **deterministic modeled** time (microseconds) —
+seeded arrivals + simulated makespans — so the CI perf gate holds these
+rows to its tight tolerance like the graph suite.  The goodput-vs-load
+curve (higher-better, so not gateable as a latency) rides in ``derived``,
+and the suite *fails* if the online scheduler ever loses to static at the
+highest load point — the ISSUE 8 acceptance criterion runs inside the
+bench.
+
+CSV: name, us_per_call = modeled latency (us), derived = workload and
+goodput context.
+"""
+from __future__ import annotations
+
+from repro.serve.bucket import ServingPool
+from repro.serve.scheduler import FifoOnlineScheduler, StaticBatchScheduler
+from repro.serve.simulate import ServeParams, simulate_serving
+from repro.serve.workload import generate_requests
+
+N_REQUESTS = 32
+SEED = 0
+RATE = 400.0                 # the mid-load point the latency rows pin
+SWEEP_RATES = (200.0, 1000.0, 5000.0)
+BUCKETS = (4, 8, 16)
+PARAMS = ServeParams(max_batch=4, kv_budget=1 << 15)
+
+
+def _run_pair(pool, rate: float):
+    reqs = generate_requests(N_REQUESTS, seed=SEED, rate=rate)
+    online = simulate_serving(reqs, pool, FifoOnlineScheduler(), PARAMS)
+    static = simulate_serving(reqs, pool, StaticBatchScheduler(), PARAMS)
+    return online, static
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    pool = ServingPool(archs=("olmo-1b",), buckets=BUCKETS, use_cache=False)
+    warm = pool.warmup()
+
+    # the per-iteration cost oracle itself: the largest bucket's block
+    # makespan — this row inherits the double-buffering win directly.
+    art = pool.get("olmo-1b", max(BUCKETS))
+    rows.append(("serve_block_iter", art.makespan * 1e6,
+                 f"bucket=T{art.bucket}/nodes={warm['nodes']}/"
+                 f"compiles={warm['unique_programs']}"))
+
+    online, static = _run_pair(pool, RATE)
+    om, sm = online.metrics, static.metrics
+    ctx = (f"n={N_REQUESTS}/rate={RATE:g}/completed={om['completed']}/"
+           f"goodput={om['goodput_tps']:.1f}tps")
+    rows.append(("serve_online_p50", om["p50_latency_s"] * 1e6, ctx))
+    rows.append(("serve_online_p99", om["p99_latency_s"] * 1e6, ctx))
+    rows.append(("serve_static_p99", sm["p99_latency_s"] * 1e6,
+                 f"n={N_REQUESTS}/rate={RATE:g}/"
+                 f"goodput={sm['goodput_tps']:.1f}tps"))
+
+    # goodput-vs-load curve; the highest point is the acceptance check.
+    curve = []
+    top = None
+    for rate in SWEEP_RATES:
+        on, st = _run_pair(pool, rate)
+        curve.append(f"gp@r{rate:g}={on.metrics['goodput_tps']:.0f}"
+                     f"vs{st.metrics['goodput_tps']:.0f}")
+        top = (on, st)
+    on, st = top
+    if on.metrics["goodput_tps"] <= st.metrics["goodput_tps"]:
+        raise AssertionError(
+            "online continuous batching lost to the static baseline at "
+            f"rate {SWEEP_RATES[-1]:g}: "
+            f"{on.metrics['goodput_tps']:.1f} <= "
+            f"{st.metrics['goodput_tps']:.1f} tok/s")
+    rows.append(("serve_goodput_curve", on.metrics["p99_latency_s"] * 1e6,
+                 ";".join(curve)))
+    return rows

@@ -13,7 +13,8 @@ the baseline JSON must reappear (matched by suite + name) with
 value.  Missing rows and regressions fail the run (exit 1) with one line per
 violation; new rows not in the baseline are reported but pass — they become
 part of the baseline when it is next regenerated.  CI gates the
-deterministic modeled-cost suites (``tuned``, ``fabric``, ``graph``)
+deterministic modeled-cost suites (``tuned``, ``fabric``, ``graph``,
+``serve``)
 against the committed ``benchmarks/baselines/BENCH_ci.json``; see README
 for how to update it.
 
@@ -47,6 +48,8 @@ SUITES = {
                "repro.fabric 2/4/8-chip strong scaling (DeepBench GEMMs)"),
     "graph": ("bench_graph",
               "repro.graph whole-block compilation (fusion + dedupe)"),
+    "serve": ("bench_serve",
+              "repro.serve online batching p50/p99 + goodput vs load"),
 }
 
 

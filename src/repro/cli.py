@@ -7,6 +7,7 @@
     repro fabric --shape 5124x700x2048 ...     # repro.fabric.simulate
     repro dryrun --all --mesh both             # repro.launch.dryrun
     repro train / repro serve                  # repro.launch.{train,serve}
+    repro servesim --compare --requests 64     # repro.serve (batching sim)
     repro bench --only tuned --json out.json   # benchmarks.run (repo checkout)
 
 Installed via ``[project.scripts]``, so a ``pip install -e .`` is enough —
@@ -32,6 +33,8 @@ COMMANDS = {
     "dryrun": ("repro.launch.dryrun", "dry-run roofline matrix"),
     "train": ("repro.launch.train", "training launch"),
     "serve": ("repro.launch.serve", "serving launch"),
+    "servesim": ("repro.serve.__main__", "online continuous-batching "
+                                         "serving simulator"),
     "bench": ("benchmarks.run", "benchmark harness (needs the repo "
                                 "checkout on sys.path / as cwd)"),
 }

@@ -478,7 +478,8 @@ def replicate_output(pp: PartitionedProgram) -> PartitionedProgram:
 
 
 def simulate_kernel_graph(kgraph, node_costs: dict, residency: dict,
-                          graph: SystemGraph | None = None) -> dict:
+                          graph: SystemGraph | None = None, *,
+                          double_buffer: bool = True) -> dict:
     """Replay a compiled ``repro.graph.KernelGraph`` on one chip's event
     timeline: every node is a compute task (duration = its kernel's modeled
     makespan), and inter-kernel tensors turn into DMA tasks on the HBM→VMEM
@@ -491,6 +492,17 @@ def simulate_kernel_graph(kgraph, node_costs: dict, residency: dict,
       * an intermediate placed ``"hbm"`` (spilled by ``plan_placement``) is
         stored once after its producer and re-loaded per consumer;
       * graph outputs are written back to HBM.
+
+    With ``double_buffer`` (the default) a node's loads overlap its compute
+    instead of fully serializing before it: every HBM→VMEM transfer feeding
+    a node is two half-size chunk tasks (total DMA occupancy unchanged —
+    the edge latency rides on the first chunk) and every node is two
+    half-cost phases on the core; phase 1 may start once each streamed
+    operand's *first* chunk has landed, phase 2 needs the full operands.
+    Dependencies only weaken, so no task finishes later than in the
+    serialized schedule — and whenever a load gates a compute the critical
+    path strictly shortens.  Stores stay whole: a writeback cannot start
+    before its producer finishes.
 
     ``node_costs`` maps node name → seconds.  Returns the makespan, the
     modeled HBM traffic in bytes, and the auditable ``(tid, deps)`` task
@@ -511,27 +523,45 @@ def simulate_kernel_graph(kgraph, node_costs: dict, residency: dict,
 
     sim = EventSim()
     produced_by: dict[str, str] = {}          # tensor -> producing task id
+    first_chunk: dict[str, str] = {}          # transfer tid -> chunk-1 tid
     hbm_bytes = 0
     spilled = {t for t, loc in residency.items() if loc == "hbm"}
+
+    def add_load(tid: str, nbytes: int, deps=()) -> None:
+        nonlocal hbm_bytes
+        hbm_bytes += nbytes
+        if double_buffer:
+            half = nbytes / (2 * feed.bandwidth)
+            a = sim.add(f"{tid}:a", resource=dma,
+                        duration=feed.latency + half, deps=deps)
+            sim.add(tid, resource=dma, duration=half, deps=(a,))
+            first_chunk[tid] = a
+        else:
+            sim.add(tid, resource=dma, duration=xfer(nbytes), deps=deps)
+
     for t in kgraph.inputs:
-        sim.add(f"load:{t}", resource=dma,
-                duration=xfer(kgraph.tensors[t].nbytes))
+        add_load(f"load:{t}", kgraph.tensors[t].nbytes)
         produced_by[t] = f"load:{t}"
-        hbm_bytes += kgraph.tensors[t].nbytes
     for node in kgraph.nodes:
         deps = []
         for t in node.consumed():
             if t in spilled:
                 tid = f"load:{t}:{node.name}"
-                sim.add(tid, resource=dma,
-                        duration=xfer(kgraph.tensors[t].nbytes),
-                        deps=(f"store:{t}",))
-                hbm_bytes += kgraph.tensors[t].nbytes
+                add_load(tid, kgraph.tensors[t].nbytes,
+                         deps=(f"store:{t}",))
                 deps.append(tid)
             else:
                 deps.append(produced_by[t])
-        sim.add(node.name, resource=core.name,
-                duration=float(node_costs[node.name]), deps=tuple(deps))
+        cost = float(node_costs[node.name])
+        if double_buffer:
+            early = tuple(first_chunk.get(d, d) for d in deps)
+            p1 = sim.add(f"{node.name}:p1", resource=core.name,
+                         duration=cost / 2, deps=early)
+            sim.add(node.name, resource=core.name, duration=cost / 2,
+                    deps=(p1, *deps))
+        else:
+            sim.add(node.name, resource=core.name,
+                    duration=cost, deps=tuple(deps))
         for t in node.produced():
             produced_by[t] = node.name
             if t in spilled:

@@ -13,6 +13,8 @@ severity, offending op/statement, message) instead of bare exceptions:
      sharded-output partition contract
   5. **graph**     (``gra.*``) — ``repro.graph`` kernel-graph wiring,
      topology, per-node program health, and placement capacity
+  6. **serve**     (``srv.*``) — ``repro.serve`` run traces: KV-aware
+     admission, bucket routing, frozen-replay fidelity, liveness
 
 plus structural checks on cached artifact payloads (``art.*``).
 
@@ -31,13 +33,15 @@ from .graph import verify_graph, verify_placement
 from .program import verify_program
 from .schedule import verify_schedule
 from .selection import verify_selection
+from .serve import verify_replay, verify_serve_trace
 
 __all__ = [
     "Diagnostic", "DiagnosticReport", "VerifyError", "RULES", "ERROR",
     "WARNING", "diag", "verify_program", "verify_selection",
     "verify_schedule", "verify_collective", "verify_partition",
     "verify_task_graph", "verify_fabric", "verify_artifact_dict",
-    "verify_graph", "verify_placement", "verify_compile", "verify_artifact",
+    "verify_graph", "verify_placement", "verify_serve_trace",
+    "verify_replay", "verify_compile", "verify_artifact",
 ]
 
 

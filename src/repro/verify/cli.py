@@ -1,6 +1,6 @@
 """``repro verify`` — run the static analyzer over the tune suites.
 
-    repro verify                          # gemm+gru+conv+fabric+graph
+    repro verify                          # gemm+gru+conv+fabric+graph+serve
     repro verify --suite gemm,conv        # subset
     repro verify --tuned                  # also check tuned configs (cache)
     repro verify --mutate                 # prove the rules fire (harness)
@@ -16,7 +16,7 @@ from __future__ import annotations
 import argparse
 import json
 
-SUITES = ("gemm", "gru", "conv", "fabric", "graph")
+SUITES = ("gemm", "gru", "conv", "fabric", "graph", "serve")
 
 
 def _verify_suite_cases(suite: str, limit, tuned: bool, rows: list) -> int:
@@ -96,6 +96,42 @@ def _verify_graph_cases(limit, rows: list) -> int:
     return failures
 
 
+def _verify_serve_cases(limit, rows: list) -> int:
+    """The serving layer: seeded online and static runs must produce
+    ``srv.*``-clean traces, and the frozen replay of the online policy
+    must agree with the live run to the bit."""
+    from ..serve.bucket import ServingPool
+    from ..serve.scheduler import (FifoOnlineScheduler, StaticBatchScheduler,
+                                   make_static_scheduler)
+    from ..serve.simulate import ServeParams, simulate_serving
+    from ..serve.workload import generate_requests
+    from . import DiagnosticReport, verify_replay, verify_serve_trace
+    failures = 0
+    pool = ServingPool(archs=("olmo-1b",), buckets=(4, 8), use_cache=False)
+    pool.warmup()
+    reqs = generate_requests(12, seed=0, rate=400.0,
+                             prompt_lens=(2, 4, 6, 8), decode_lens=(1, 2, 3))
+    params = ServeParams(max_batch=4, kv_budget=1 << 15)
+    cases = [("online", FifoOnlineScheduler()),
+             ("static", StaticBatchScheduler())]
+    results = {}
+    for name, sched in cases[:limit] if limit else cases:
+        res = simulate_serving(reqs, pool, sched, params)
+        results[name] = res
+        report = DiagnosticReport()
+        report.extend(verify_serve_trace(res.trace()))
+        failures += _emit(f"serve_{name}", report, rows)
+    if "online" in results:
+        frozen = simulate_serving(
+            reqs, pool, make_static_scheduler(FifoOnlineScheduler)(), params)
+        report = DiagnosticReport()
+        report.extend(verify_serve_trace(frozen.trace()))
+        report.extend(verify_replay(frozen.trace(),
+                                    results["online"].trace()))
+        failures += _emit("serve_frozen_replay", report, rows)
+    return failures
+
+
 def _emit(name: str, report, rows: list) -> int:
     rows.append({"case": name, **report.to_dict()})
     status = "ok" if report.ok else "FAIL"
@@ -170,6 +206,8 @@ def main(argv=None) -> int:
             failures += _verify_fabric_cases(args.limit, rows)
         elif suite == "graph":
             failures += _verify_graph_cases(args.limit, rows)
+        elif suite == "serve":
+            failures += _verify_serve_cases(args.limit, rows)
         else:
             failures += _verify_suite_cases(suite, args.limit, args.tuned,
                                             rows)

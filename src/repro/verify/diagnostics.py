@@ -8,8 +8,9 @@ statement index, a buffer or node name) and a human message.  A
 error-severity findings* (warnings surface but do not fail a compile).
 
 Rule ids are namespaced by layer (``prg.*``, ``sel.*``, ``sch.*``,
-``fab.*``, ``gra.*``, ``art.*``) and registered in ``RULES`` so the CLI, the mutation
-harness and the README rule table all speak from one source.
+``fab.*``, ``gra.*``, ``srv.*``, ``art.*``) and registered in ``RULES`` so
+the CLI, the mutation harness and the README rule table all speak from one
+source.
 """
 from __future__ import annotations
 
@@ -74,6 +75,15 @@ RULES: dict[str, str] = {
                         "(prg.* layer)",
     "gra.capacity": "vmem-resident live tensors must fit the placement "
                     "budget",
+    # serving-trace checker (verify/serve.py)
+    "srv.kv-budget": "admitted batches must respect the KV byte budget and "
+                     "the batch cap",
+    "srv.bucket-route": "every request must be served by its pad-up "
+                        "lattice bucket",
+    "srv.replay-drift": "a frozen schedule must replay to identical "
+                        "per-request admit/completion times",
+    "srv.starvation": "every arrived request must eventually be admitted "
+                      "and complete",
     # artifact payload checks (cached loads, verify/artifact.py)
     "art.schema": "artifact payloads must carry the known schema/fields",
     "art.instr-plan": "tile plans must be role-consistent and positive",

@@ -46,6 +46,8 @@ class Bundle:
     kgraph: object = None                 # repro.graph KernelGraph
     locations: dict = field(default_factory=dict)  # tensor -> vmem|hbm
     budget: int = 0
+    trace: dict = field(default_factory=dict)   # repro.serve run trace
+    trace2: dict = field(default_factory=dict)  # its bit-identical twin
 
 
 _BASE: dict[str, Bundle] = {}
@@ -99,6 +101,26 @@ def _graph_bundle() -> Bundle:
     return copy.deepcopy(_BASE["graph"])
 
 
+def _serve_bundle() -> Bundle:
+    if "serve" not in _BASE:
+        import copy as _copy
+        from ..serve.bucket import ServingPool
+        from ..serve.scheduler import FifoOnlineScheduler
+        from ..serve.simulate import ServeParams, simulate_serving
+        from ..serve.workload import generate_requests
+        pool = ServingPool(archs=("olmo-1b",), buckets=(4, 8),
+                           use_cache=False)
+        pool.warmup()
+        reqs = generate_requests(8, seed=3, rate=400.0,
+                                 prompt_lens=(2, 4, 6, 8),
+                                 decode_lens=(1, 2, 3))
+        res = simulate_serving(reqs, pool, FifoOnlineScheduler(),
+                               ServeParams(max_batch=4, kv_budget=1 << 15))
+        trace = res.trace()
+        _BASE["serve"] = Bundle(trace=trace, trace2=_copy.deepcopy(trace))
+    return copy.deepcopy(_BASE["serve"])
+
+
 # --------------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------------- #
@@ -131,6 +153,11 @@ def _verify_bundle(b: Bundle) -> list[Diagnostic]:
         from .graph import verify_graph, verify_placement
         diags.extend(verify_graph(b.kgraph))
         diags.extend(verify_placement(b.kgraph, b.locations, b.budget))
+    if b.trace:
+        from .serve import verify_replay, verify_serve_trace
+        diags.extend(verify_serve_trace(b.trace))
+        if b.trace2:
+            diags.extend(verify_replay(b.trace, b.trace2))
     return diags
 
 
@@ -413,6 +440,50 @@ def _mut_gra_over_budget(b: Bundle):
     b.budget = 1
 
 
+# -- serving layer ----------------------------------------------------------- #
+
+
+@mutation("srv-over-admit", "srv.kv-budget", kind="serve")
+def _mut_srv_over_admit(b: Bundle):
+    # Pack every request into the busiest iteration's batch: the summed KV
+    # footprint blows through the byte budget (and likely the batch cap).
+    all_rids = [r["rid"] for r in b.trace["requests"]]
+    b.trace["iterations"][0]["running"] = all_rids
+    b.trace2 = {}
+
+
+@mutation("srv-bucket-miss", "srv.bucket-route", kind="serve")
+def _mut_srv_bucket_miss(b: Bundle):
+    # Route a small prompt to the biggest bucket: a lattice miss served by
+    # a wrong-shape artifact.
+    req = min(b.trace["requests"], key=lambda r: r["prompt_len"])
+    req["bucket"] = max(b.trace["buckets"])
+    b.trace2 = {}
+
+
+@mutation("srv-replay-drift", "srv.replay-drift", kind="serve")
+def _mut_srv_replay_drift(b: Bundle):
+    # Nudge one completion in the "frozen" twin: the replay no longer
+    # reproduces the online run bit-for-bit.
+    req = next(r for r in b.trace2["requests"]
+               if r["completed"] is not None)
+    req["completed"] += 1e-6
+
+
+@mutation("srv-starve", "srv.starvation", kind="serve")
+def _mut_srv_starve(b: Bundle):
+    # A buggy policy never schedules the last request: wipe its admission
+    # and scrub it from every iteration.
+    victim = b.trace["requests"][-1]
+    victim["admitted"] = victim["completed"] = None
+    for itrec in b.trace["iterations"]:
+        itrec["running"] = [r for r in itrec["running"]
+                            if r != victim["rid"]]
+        itrec["admitted"] = [r for r in itrec["admitted"]
+                             if r != victim["rid"]]
+    b.trace2 = {}
+
+
 # -- artifact payloads ------------------------------------------------------ #
 
 
@@ -464,7 +535,7 @@ class MutationResult:
 
 
 _BUNDLES = {"gemm": _gemm_bundle, "fabric": _fabric_bundle,
-            "graph": _graph_bundle}
+            "graph": _graph_bundle, "serve": _serve_bundle}
 
 
 def run_mutation(name: str) -> MutationResult:
@@ -491,4 +562,5 @@ def baseline_report() -> DiagnosticReport:
     report.extend(verify_partition(fb.partition))
     report.extend(verify_task_graph(fb.tasks))
     report.extend(_verify_bundle(_graph_bundle()))
+    report.extend(_verify_bundle(_serve_bundle()))
     return report

@@ -1,0 +1,319 @@
+"""Tests for ``repro.serve`` — online continuous-batching serving on top
+of CompiledGraph: seeded workloads, the bucketed warmup lattice, KV-aware
+admission, frozen-schedule replay, the ``srv.*`` verifier rules, and the
+double-buffered load/compute overlap the serve makespans inherit.
+"""
+from __future__ import annotations
+
+import copy
+import json
+import warnings
+
+import pytest
+
+from repro.compile.cache import ArtifactCache
+from repro.compile.driver import clear_memo
+from repro.configs.registry import get_trace_config
+from repro.serve import (Admission, FifoOnlineScheduler, Request,
+                         ServeParams, ServingPool, StaticBatchScheduler,
+                         TracingScheduler, bucket_for, generate_requests,
+                         kv_bytes, make_static_scheduler, percentile,
+                         simulate_serving)
+from repro.verify import (verify_replay, verify_serve_trace,
+                          verify_task_graph)
+from repro.verify.mutate import run_mutation
+
+BUCKETS = (4, 8)
+PARAMS = ServeParams(max_batch=4, kv_budget=1 << 15)
+WORKLOAD = dict(seed=0, rate=400.0, prompt_lens=(2, 4, 6, 8),
+                decode_lens=(1, 2, 3))
+
+
+@pytest.fixture(scope="module")
+def pool():
+    p = ServingPool(archs=("olmo-1b",), buckets=BUCKETS, use_cache=False)
+    p.warmup()
+    return p
+
+
+@pytest.fixture(scope="module")
+def requests():
+    return generate_requests(12, **WORKLOAD)
+
+
+@pytest.fixture(scope="module")
+def online(requests, pool):
+    return simulate_serving(requests, pool, FifoOnlineScheduler(), PARAMS)
+
+
+@pytest.fixture(scope="module")
+def static(requests, pool):
+    return simulate_serving(requests, pool, StaticBatchScheduler(), PARAMS)
+
+
+@pytest.fixture(scope="module")
+def frozen(requests, pool):
+    sched = make_static_scheduler(FifoOnlineScheduler)()
+    return simulate_serving(requests, pool, sched, PARAMS)
+
+
+# -- workload -----------------------------------------------------------------
+
+def test_workload_deterministic():
+    a = generate_requests(16, seed=7, rate=250.0)
+    b = generate_requests(16, seed=7, rate=250.0)
+    assert [r.to_dict() for r in a] == [r.to_dict() for r in b]
+    c = generate_requests(16, seed=8, rate=250.0)
+    assert [r.to_dict() for r in a] != [r.to_dict() for r in c]
+
+
+def test_workload_poisson_shape():
+    reqs = generate_requests(32, seed=0, rate=100.0)
+    arrivals = [r.arrival for r in reqs]
+    assert arrivals == sorted(arrivals)
+    assert all(a >= 0.0 for a in arrivals)
+    assert len({r.rid for r in reqs}) == 32
+    assert all(r.prompt_len > 0 and r.decode_len > 0 for r in reqs)
+
+
+def test_workload_burst_groups():
+    reqs = generate_requests(16, seed=0, rate=100.0, arrival="burst",
+                             burst_size=4)
+    starts = sorted({r.arrival for r in reqs})
+    # 16 requests in bursts of 4 share exactly 4 distinct arrival times.
+    assert len(starts) == 4
+    for s in starts:
+        assert sum(1 for r in reqs if r.arrival == s) == 4
+
+
+def test_request_roundtrip():
+    r = Request(rid=3, arch="olmo-1b", arrival=0.5, prompt_len=6,
+                decode_len=2)
+    assert Request.from_dict(r.to_dict()) == r
+    assert r.tokens == 8
+
+
+def test_percentile():
+    vals = [4.0, 1.0, 3.0, 2.0]
+    assert percentile(vals, 0.0) == 1.0
+    assert percentile(vals, 100.0) == 4.0
+    assert percentile(vals, 50.0) == 2.5
+    assert vals == [4.0, 1.0, 3.0, 2.0]    # input untouched
+
+
+# -- bucket lattice -----------------------------------------------------------
+
+def test_bucket_for_pads_up():
+    assert bucket_for(1, (4, 8)) == 4
+    assert bucket_for(4, (4, 8)) == 4
+    assert bucket_for(5, (4, 8)) == 8
+    with pytest.raises(ValueError):
+        bucket_for(9, (4, 8))
+
+
+def test_kv_bytes_model():
+    cfg = get_trace_config("olmo-1b")
+    # bucket * K&V * kv_heads * head_dim * f32 * layers
+    assert kv_bytes(cfg, 16) == 16 * 2 * cfg.n_kv_heads * cfg.hd * 4 \
+        * cfg.n_layers
+
+
+def test_warmup_dedupes_across_buckets(pool):
+    s = pool.stats
+    assert s["entries"] == len(BUCKETS)
+    # kernels shared between the two bucket graphs compile once
+    assert s["unique_programs"] < s["nodes"]
+    assert s["fresh_compiles"] == s["unique_programs"]
+    assert s["evicted"] == 0
+
+
+def test_second_arch_warms_for_free(tmp_path):
+    # every get_trace_config arch scales to the same block dims, so the
+    # second family's kernels are already in the cache: zero extra fresh.
+    clear_memo()
+    one = ServingPool(archs=("olmo-1b",), buckets=BUCKETS,
+                      cache=ArtifactCache(str(tmp_path / "one.json")))
+    s1 = one.warmup()
+    clear_memo()
+    two = ServingPool(archs=("olmo-1b", "qwen2-7b"), buckets=BUCKETS,
+                      cache=ArtifactCache(str(tmp_path / "two.json")))
+    s2 = two.warmup()
+    assert s2["entries"] == 2 * len(BUCKETS)
+    assert s2["fresh_compiles"] == s1["fresh_compiles"]
+    assert s2["unique_programs"] == s1["unique_programs"]
+
+
+def test_warm_restart_zero_fresh(tmp_path):
+    path = str(tmp_path / "arts.json")
+    clear_memo()
+    cold = ServingPool(archs=("olmo-1b",), buckets=BUCKETS,
+                       cache=ArtifactCache(path))
+    sc = cold.warmup()
+    assert sc["fresh_compiles"] > 0
+    clear_memo()
+    warm = ServingPool(archs=("olmo-1b",), buckets=BUCKETS,
+                       cache=ArtifactCache(path))
+    sw = warm.warmup()
+    assert sw["fresh_compiles"] == 0
+    assert sw["cache_hits"] == sc["fresh_compiles"] + sc["cache_hits"]
+
+
+def test_admit_corrupt_evicts_and_warns_once(pool):
+    import repro.serve.bucket as bucket_mod
+    art = pool.get("olmo-1b", BUCKETS[0])
+    corrupt = copy.deepcopy(art.cg)
+    for t in list(corrupt.placement.locations):
+        corrupt.placement.locations[t] = "l2"    # no legal placement
+    spare = ServingPool(archs=("olmo-1b",), buckets=BUCKETS,
+                        use_cache=False)
+    bucket_mod._warned_corrupt.discard(("olmo-1b", BUCKETS[0]))
+    with pytest.warns(UserWarning, match="evicting corrupt"):
+        repaired = spare.admit(corrupt, "olmo-1b", BUCKETS[0])
+    assert spare.stats.get("evicted") == 1
+    from repro.verify import DiagnosticReport, verify_placement
+    rep = DiagnosticReport()
+    rep.extend(verify_placement(repaired.cg.graph,
+                                repaired.cg.placement.locations,
+                                repaired.cg.placement.budget))
+    assert rep.ok
+    with warnings.catch_warnings():          # second corruption: silent
+        warnings.simplefilter("error")
+        spare.admit(copy.deepcopy(corrupt), "olmo-1b", BUCKETS[0])
+    assert spare.stats.get("evicted") == 2
+
+
+def test_route(pool, requests):
+    r = requests[0]
+    art = pool.route(r)
+    assert art.bucket == bucket_for(r.prompt_len, BUCKETS)
+    assert art.arch == r.arch
+
+
+# -- simulation ---------------------------------------------------------------
+
+def test_sim_bit_deterministic(requests, pool, online):
+    again = simulate_serving(requests, pool, FifoOnlineScheduler(), PARAMS)
+    assert again.metrics == online.metrics
+    assert again.completion_times() == online.completion_times()
+
+
+def test_all_requests_complete(online, static):
+    for res in (online, static):
+        assert res.metrics["completed"] == res.metrics["n_requests"]
+        assert res.metrics["starved"] == 0
+
+
+def test_admission_respects_kv_and_batch(online):
+    tr = online.trace()
+    by_rid = {r["rid"]: r for r in tr["requests"]}
+    for it in tr["iterations"]:
+        assert len(it["running"]) <= PARAMS.max_batch
+        used = sum(by_rid[r]["kv_bytes"] for r in it["running"])
+        assert used <= PARAMS.kv_budget
+        assert used == it["kv_used"]
+
+
+def test_latency_positive_and_ordered(online):
+    m = online.metrics
+    assert 0.0 < m["p50_latency_s"] <= m["p99_latency_s"]
+    assert m["goodput_tps"] > 0.0
+
+
+def test_online_beats_static_at_high_load(pool):
+    reqs = generate_requests(24, **{**WORKLOAD, "rate": 2000.0})
+    on = simulate_serving(reqs, pool, FifoOnlineScheduler(), PARAMS)
+    st = simulate_serving(reqs, pool, StaticBatchScheduler(), PARAMS)
+    assert on.metrics["goodput_tps"] > st.metrics["goodput_tps"]
+    assert on.metrics["makespan_s"] < st.metrics["makespan_s"]
+
+
+def test_eventsim_timeline_audits_clean(online):
+    assert online.tasks
+    assert verify_task_graph(online.tasks) == []
+
+
+def test_trace_json_roundtrip(online):
+    tr = online.trace()
+    assert json.loads(json.dumps(tr)) == tr
+    assert tr["schema"] == 1
+    assert tr["scheduler"] == "online-fifo"
+
+
+# -- frozen replay ------------------------------------------------------------
+
+def test_tracing_scheduler_records(requests, pool):
+    tracer = TracingScheduler(FifoOnlineScheduler())
+    simulate_serving(requests, pool, tracer, PARAMS)
+    assert sorted(a.rid for a in tracer.schedules) == \
+        sorted(r.rid for r in requests)
+    assert all(isinstance(a, Admission) and a.wave == 0
+               for a in tracer.schedules)
+
+
+def test_frozen_replay_is_bit_identical(online, frozen):
+    assert frozen.completion_times() == online.completion_times()
+    assert frozen.metrics["p50_latency_s"] == online.metrics["p50_latency_s"]
+    assert frozen.metrics["p99_latency_s"] == online.metrics["p99_latency_s"]
+    assert frozen.scheduler == "static-online-fifo"
+
+
+# -- the srv.* verifier -------------------------------------------------------
+
+def test_verify_traces_clean(online, static, frozen):
+    for res in (online, static, frozen):
+        assert verify_serve_trace(res.trace()) == []
+
+
+def test_verify_replay_clean_and_drift(online, frozen):
+    assert verify_replay(frozen.trace(), online.trace()) == []
+    drifted = frozen.trace()
+    drifted["requests"][0] = dict(drifted["requests"][0])
+    drifted["requests"][0]["completed"] += 1e-6
+    diags = verify_replay(drifted, online.trace())
+    assert any(d.rule == "srv.replay-drift" for d in diags)
+
+
+def test_verify_catches_kv_violation(online):
+    tr = online.trace()
+    tr["params"] = dict(tr["params"], kv_budget=1)
+    diags = verify_serve_trace(tr)
+    assert any(d.rule == "srv.kv-budget" for d in diags)
+
+
+def test_verify_catches_starvation(online):
+    tr = online.trace()
+    tr["requests"][0] = dict(tr["requests"][0], admitted=None,
+                             completed=None)
+    rid = tr["requests"][0]["rid"]
+    tr["iterations"] = [
+        dict(it, running=[r for r in it["running"] if r != rid],
+             admitted=[r for r in it["admitted"] if r != rid])
+        for it in tr["iterations"]]
+    diags = verify_serve_trace(tr)
+    assert any(d.rule == "srv.starvation" for d in diags)
+
+
+@pytest.mark.parametrize("name", ["srv-over-admit", "srv-bucket-miss",
+                                  "srv-replay-drift", "srv-starve"])
+def test_serve_mutations_caught(name):
+    res = run_mutation(name)
+    assert res.caught, f"{name}: expected {res.expected}, got {res.rules}"
+    assert res.expected in res.rules
+
+
+# -- double-buffered overlap --------------------------------------------------
+
+def test_double_buffer_strictly_faster(pool):
+    from repro.fabric.simulate import simulate_kernel_graph
+    cg = pool.get("olmo-1b", max(BUCKETS)).cg
+    g = cg.graph
+    costs = {n.name: cg.kernels[cg.node_kernels[n.name]].cost
+             for n in g.nodes}
+    db = simulate_kernel_graph(g, costs, cg.placement.locations)
+    ser = simulate_kernel_graph(g, costs, cg.placement.locations,
+                                double_buffer=False)
+    assert db["makespan"] < ser["makespan"]
+    assert db["hbm_bytes"] == ser["hbm_bytes"]
+    assert verify_task_graph(db["tasks"]) == []
+    # the pool artifact's recorded makespan is the double-buffered one
+    assert cg.makespan == db["makespan"]

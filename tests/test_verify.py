@@ -71,7 +71,8 @@ def test_mutation_is_caught(name):
 
 def test_mutation_registry_covers_every_layer():
     layers = {MUTATIONS[n][0].split(".", 1)[0] for n in MUTATIONS}
-    assert layers == {"prg", "sel", "sch", "fab", "gra", "art"}
+    assert layers == {"prg", "sel", "sch", "fab", "gra", "srv",
+                      "art"}
     assert len(MUTATIONS) >= 10
 
 
@@ -111,7 +112,7 @@ def test_report_json_round_trip_and_severity_split():
 def test_rules_table_is_namespaced():
     for rule in RULES:
         assert rule.split(".", 1)[0] in ("prg", "sel", "sch", "fab", "gra",
-                                         "art")
+                                         "srv", "art")
 
 
 # --------------------------------------------------------------------------- #
