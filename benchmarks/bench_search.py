@@ -1,0 +1,126 @@
+"""Search-throughput suite: configs/sec of the batched evaluation tier
+(``repro.search.batch`` + schedule-key memo + incremental re-scheduling)
+against the scalar per-config path, on the DeepBench GEMM search spaces.
+
+Lanes per shape:
+
+  * **sequential** — ``CostModelEvaluator.__call__`` per config (guard +
+    full compile each time) over a seeded sample of the space,
+  * **batched**    — ``evaluate_many`` over the **full enumerated space**
+    (one vectorized guard pass, one schedule per distinct schedule key).
+
+Scores are bit-identical between the lanes (asserted in-suite on the
+sample), so the ratio is pure throughput.  The suite **fails** if the
+batched lane is not at least ``MIN_SPEEDUP``x the sequential configs/sec —
+this is the CI search-throughput gate.
+
+Every ``us_per_call`` is the **deterministic modeled** best makespan over
+the full space (microseconds) — stable across machines, so the perf
+baseline can hold these rows to its tight tolerance.  Wall-clock rates
+live in ``derived`` only.
+
+CSV: name, us_per_call = modeled best-over-space makespan (us), derived =
+"space=<n>/keys=<k>/seq=<c/s>/batch=<c/s>/speedup=<x>[/fresh=<f>/delta=<d>]".
+"""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.compile.driver import gemm_selection, gru_selection
+from repro.core.sysgraph import tpu_v5e
+from repro.search.evaluate import CostModelEvaluator
+from repro.search.space import SearchSpace
+
+#: CI gate: batched configs/sec must beat sequential by at least this much.
+MIN_SPEEDUP = 10.0
+
+#: sequential-lane sample size (full spaces are 5760 configs; timing the
+#: scalar path on all of them would dominate the whole benchmark run).
+SEQ_SAMPLE = 16
+
+GEMM_SHAPES = [(1024, 128, 1024), (2048, 64, 2048), (35, 700, 2048)]
+
+#: heterogeneous GRU (input dim != hidden dim): instruction 0's reduction
+#: is cap-invariant, so tile_k/vmem sweeps share an unchanged instruction
+#: prefix with their anchor — the incremental re-scheduling showcase.
+GRU_DELTA_SHAPE = (16, 512, 64)
+
+
+def _lanes(sel, graph, space) -> tuple[float, str]:
+    """(best modeled cost over the full space, derived string) — and the
+    in-suite throughput gate."""
+    configs = list(space.enumerate_configs())
+    sample_idx = random.Random(0).sample(range(len(configs)), SEQ_SAMPLE)
+    sample = [configs[i] for i in sample_idx]
+
+    seq = CostModelEvaluator(sel, graph)
+    t0 = time.perf_counter()
+    seq_scores = [seq(c) for c in sample]
+    seq_s = time.perf_counter() - t0
+
+    batch = CostModelEvaluator(sel, graph)
+    t0 = time.perf_counter()
+    scores = batch.evaluate_many(configs)
+    batch_s = time.perf_counter() - t0
+
+    for i, s in zip(sample_idx, seq_scores):
+        if scores[i] != s:
+            raise RuntimeError(f"batched score diverged at config {i}: "
+                               f"{scores[i]} != scalar {s}")
+    seq_rate = len(sample) / max(seq_s, 1e-9)
+    batch_rate = len(configs) / max(batch_s, 1e-9)
+    speedup = batch_rate / seq_rate
+    if speedup < MIN_SPEEDUP:
+        raise RuntimeError(
+            f"search throughput regression: batched evaluation is only "
+            f"{speedup:.1f}x sequential (gate: {MIN_SPEEDUP}x) — "
+            f"seq={seq_rate:.0f}/s batch={batch_rate:.0f}/s")
+    best = min(s for s in scores if s != float("inf"))
+    st = batch.stats
+    derived = (f"space={len(configs)}/keys={st.fresh + st.delta}/"
+               f"seq={seq_rate:.0f}/batch={batch_rate:.0f}/"
+               f"speedup={speedup:.0f}x/fresh={st.fresh}/delta={st.delta}")
+    return best * 1e6, derived
+
+
+def _delta_row() -> tuple[str, float, str]:
+    """Incremental re-scheduling on the heterogeneous GRU: a same-policy
+    tile_k/vmem/grow sweep must resume from the anchor's unchanged prefix
+    (delta > 0), bit-identical to from-scratch (the evaluator's contract)."""
+    batch, hidden, inp = GRU_DELTA_SHAPE
+    _, sel = gru_selection(batch, hidden, inp)
+    graph = tpu_v5e(1)
+    space = SearchSpace.for_graph(graph)
+    base = space.baseline()
+    choices = {a.name: a.choices for a in space.axes}
+    sweep = [dict(base, tile_k=tk, vmem_frac=vf, grow_j=gj)
+             for tk in choices["tile_k"]
+             for vf in choices["vmem_frac"]
+             for gj in choices["grow_j"]]
+    ev = CostModelEvaluator(sel, graph)
+    scores = ev.evaluate_many(sweep)
+    if ev.stats.delta == 0:
+        raise RuntimeError("incremental re-scheduling never fired on the "
+                           "heterogeneous GRU sweep (delta == 0)")
+    check = CostModelEvaluator(sel, graph, incremental=False)
+    for cfg, s in zip(sweep[:4], scores[:4]):
+        ref = check.evaluate_many([cfg])[0]
+        if s != ref:
+            raise RuntimeError(f"incremental score diverged: {s} != {ref}")
+    best = min(s for s in scores if s != float("inf"))
+    derived = (f"sweep={len(sweep)}/fresh={ev.stats.fresh}/"
+               f"delta={ev.stats.delta}/memo={ev.stats.memo_hits}")
+    return (f"search_gru_{batch}x{hidden}x{inp}_delta", best * 1e6, derived)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    graph = tpu_v5e(1)
+    space = SearchSpace.for_graph(graph)
+    for m, n, k in GEMM_SHAPES:
+        _, sel = gemm_selection(m, n, k)
+        us, derived = _lanes(sel, graph, space)
+        rows.append((f"search_gemm_{m}x{n}x{k}", us, derived))
+    rows.append(_delta_row())
+    return rows

@@ -50,6 +50,9 @@ SUITES = {
               "repro.graph whole-block compilation (fusion + dedupe)"),
     "serve": ("bench_serve",
               "repro.serve online batching p50/p99 + goodput vs load"),
+    "search": ("bench_search",
+               "repro.search batched-evaluation throughput vs scalar "
+               "(gated >= 10x)"),
 }
 
 
@@ -61,12 +64,15 @@ def _epilog() -> str:
 
 def compare_to_baseline(records: list[dict], baseline: dict,
                         tolerance_pct: float,
-                        out=sys.stderr) -> list[str]:
+                        out=sys.stderr, ran_suites=None) -> list[str]:
     """Violations of ``records`` against a previously written ``--json``
     payload: baseline rows that disappeared or got slower than the
     tolerance.  Baseline rows that recorded an error (us_per_call < 0)
     gate nothing — a fixed suite reports real rows under real names, so
-    the synthetic error row would otherwise read as "missing" forever."""
+    the synthetic error row would otherwise read as "missing" forever.
+    With ``ran_suites``, baseline rows of suites that were not selected
+    this run (``--only``) gate nothing either — one committed baseline
+    serves both the full perf gate and single-suite lanes."""
     got = {}
     for r in records:
         got[(r.get("suite"), r.get("name"))] = r
@@ -74,6 +80,8 @@ def compare_to_baseline(records: list[dict], baseline: dict,
     tol = 1.0 + tolerance_pct / 100.0
     for b in baseline.get("rows", []):
         key = (b.get("suite"), b.get("name"))
+        if ran_suites is not None and key[0] not in ran_suites:
+            continue
         base_us = float(b.get("us_per_call", -1.0))
         if base_us < 0:
             continue    # baseline recorded an error for this row: nothing
@@ -179,7 +187,8 @@ def main() -> None:
             print(f"cannot read baseline {args.baseline}: {e}",
                   file=sys.stderr)
             raise SystemExit(2)
-        violations = compare_to_baseline(records, baseline, args.tolerance)
+        violations = compare_to_baseline(records, baseline, args.tolerance,
+                                         ran_suites=set(selected))
         for v in violations:
             print(f"PERF REGRESSION: {v}", file=sys.stderr)
         if violations:

@@ -19,7 +19,7 @@ import tempfile
 
 from ..core.sysgraph import SystemGraph
 from ..search import space as _space
-from ..search.cache import CACHE_ERRORS, warn_corrupt_cache
+from ..search.cache import CACHE_ERRORS, file_lock, warn_corrupt_cache
 from .artifact import ARTIFACT_SCHEMA, CompiledKernel
 
 #: Override the default artifact-cache location (e.g. in CI).
@@ -120,8 +120,13 @@ class ArtifactCache:
         return self._entries
 
     def save(self) -> None:
-        # Merge-on-save (same contract as the tuning cache): last writer
-        # wins per key, not per file.
+        # Merge-on-save under the same advisory file lock as the tuning
+        # cache: concurrent savers serialize, so parallel tuner workers
+        # cannot drop each other's artifacts.
+        with file_lock(self.path):
+            self._save_locked()
+
+    def _save_locked(self) -> None:
         ours = dict(self.load())
         entries = ArtifactCache(self.path).load()
         entries.update(ours)

@@ -21,6 +21,7 @@ by the benchmarks and by CostModelApproach.
 """
 from __future__ import annotations
 
+import copy
 import math
 from dataclasses import dataclass, field
 
@@ -187,6 +188,29 @@ class SchedulerState:
         self.clock = 0
         self.device_load: dict[str, float] = {}
 
+    def clone(self) -> "SchedulerState":
+        """Cheap structural copy for segment snapshots: the immutable
+        context (graph, homes, dtypes) is shared, every mutable table is
+        copied one level deep (``copies`` two levels: its values are
+        per-node version dicts).  ``copy.deepcopy`` would also clone the
+        SystemGraph — ~1000x the work for the incremental scheduler's
+        per-instruction snapshots."""
+        s = SchedulerState.__new__(SchedulerState)
+        s.graph = self.graph
+        s.homes = self.homes
+        s.dtypes = self.dtypes
+        s.version = dict(self.version)
+        s.copies = {k: dict(v) for k, v in self.copies.items()}
+        s.used = dict(self.used)
+        s.lru = dict(self.lru)
+        s.clock = self.clock
+        s.device_load = dict(self.device_load)
+        # round_robin's per-run cursor lives on the state (approach.py), so
+        # a resumed suffix continues the rotation exactly where the parent
+        # run stood at the snapshot.
+        s._rr_cursor = getattr(self, "_rr_cursor", 0)
+        return s
+
     # -- region bookkeeping ---------------------------------------------------
     @staticmethod
     def key(region: Region) -> tuple:
@@ -289,6 +313,10 @@ class Scheduler:
                                        for b in self.prog.buffers})
         self.ops: list[ScheduledOp] = []
         self._uid = 0
+        # instr idx -> (op count, state snapshot) taken right after the last
+        # tile of that instruction retired; filled by
+        # run_body(record_segments=True) and consumed by schedule_incremental.
+        self.segments: dict[int, tuple[int, SchedulerState]] = {}
 
     # -- helpers ------------------------------------------------------------
     def _buffer_bytes(self, name: str) -> int:
@@ -579,18 +607,36 @@ class Scheduler:
     def run(self) -> Schedule:
         return self.run_body(writeback=True)
 
-    def run_body(self, writeback: bool = True) -> Schedule:
+    def run_body(self, writeback: bool = True, first_instr: int = 0,
+                 record_segments: bool = False) -> Schedule:
+        """Schedule instructions ``first_instr..`` on top of the current
+        state/ops (both empty for a fresh run; pre-seeded with a parent's
+        prefix for an incremental resume).  Skipping a prefix is sound
+        because both unroll policies sort by ``instr_idx`` first, so the
+        tile stream of a suffix equals the suffix of the full tile stream.
+
+        With ``record_segments`` the scheduler snapshots ``(op count,
+        state)`` after the last tile of every instruction (except the final
+        one), keyed by instr idx — the resume points ``schedule_incremental``
+        splices from."""
         all_tiles: list[ComputeTile] = []
         for idx, si in enumerate(self.sel.instrs):
             devices = self.graph.compute_nodes_for(si.needle.name)
             if not devices:
                 raise ScheduleError(f"no device executes {si.needle.name}")
             hw_tile = devices[0].matmul_tile
+            if idx < first_instr:
+                continue
             all_tiles.extend(self._tiles_for(idx, si, hw_tile))
 
         tiles = self.approach.unroll_order(all_tiles)
 
+        prev_idx: int | None = None
         for tile in tiles:
+            if record_segments and prev_idx is not None \
+                    and tile.instr_idx != prev_idx:
+                self.segments[prev_idx] = (len(self.ops), self.state.clone())
+            prev_idx = tile.instr_idx
             devices = self.graph.compute_nodes_for(tile.needle_name)
             dev = self.approach.choose_device(tile, devices, self.state)
             tile.device = dev.name
@@ -739,5 +785,53 @@ def schedule(selection: Selection, graph: SystemGraph,
 
 
 def _clone_state(state: SchedulerState) -> SchedulerState:
-    import copy
     return copy.deepcopy(state)
+
+
+# --------------------------------------------------------------------------- #
+# Incremental re-scheduling (local-walk neighbors)
+# --------------------------------------------------------------------------- #
+
+
+def schedule_with_segments(
+        selection: Selection, graph: SystemGraph,
+        approach: Approach) -> tuple[Schedule, dict]:
+    """Full schedule plus per-instruction resume points.  The returned
+    ``segments`` map (instr idx -> (op count, state snapshot)) is the anchor
+    a later :func:`schedule_incremental` call resumes from."""
+    sch = Scheduler(selection, graph, approach)
+    sched = sch.run_body(writeback=True, record_segments=True)
+    return sched, sch.segments
+
+
+def schedule_incremental(
+        selection: Selection, graph: SystemGraph, approach: Approach,
+        parent_sched: Schedule, segments: dict,
+        first_changed: int, record: bool = False) -> tuple[Schedule, dict]:
+    """Re-schedule reusing the parent's op stream for every instruction
+    before ``first_changed`` (the first SelectedInstr whose resolved tile
+    differs from the parent's).  Sound because tile streams are instr-major
+    (suffix-sort equality), the snapshot carries the full versioned-copy
+    state plus the round_robin cursor, and the cost model's replay is
+    prefix-causal — so the spliced prefix replays to identical times and the
+    suffix is scheduled exactly as a from-scratch run would schedule it.
+
+    Falls back to a from-scratch :func:`schedule_with_segments` when no
+    snapshot precedes ``first_changed`` (e.g. the first instruction
+    changed)."""
+    if first_changed <= 0 or (first_changed - 1) not in segments:
+        return schedule_with_segments(selection, graph, approach)
+    boundary, snap = segments[first_changed - 1]
+    sch = Scheduler(selection, graph, approach, state=snap.clone())
+    # Prefix ops are shallow-copied: cost_model mutates op.start/end, and the
+    # parent schedule must keep its own timings.
+    sch.ops = [copy.copy(op) for op in parent_sched.ops[:boundary]]
+    sch._uid = boundary
+    sched = sch.run_body(writeback=True, first_instr=first_changed,
+                         record_segments=record)
+    # The parent's prefix snapshots remain valid resume points for the
+    # child (the spliced prefix is identical by construction).
+    for idx, ent in segments.items():
+        if idx < first_changed:
+            sch.segments.setdefault(idx, ent)
+    return sched, sch.segments

@@ -13,12 +13,18 @@ path so a damaged cache never degrades performance silently.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import tempfile
 import warnings
 from dataclasses import dataclass, field
 from functools import lru_cache
+
+try:                                    # POSIX advisory locks
+    import fcntl
+except ImportError:                     # pragma: no cover - non-POSIX
+    fcntl = None
 
 SCHEMA_VERSION = 1
 
@@ -42,6 +48,30 @@ def warn_corrupt_cache(path: str, err: Exception) -> None:
         return
     _warned_corrupt.add(path)
     warnings.warn(f"ignoring corrupt cache file {path}: {err}", stacklevel=3)
+
+
+@contextlib.contextmanager
+def file_lock(path: str):
+    """Advisory inter-process lock on ``path + '.lock'``.
+
+    Serializes the merge-on-save read-modify-write of the persistent caches
+    so parallel tuner workers (``tune --workers N``) cannot interleave
+    between a save's re-read and its atomic replace — without the lock a
+    racing pair can each merge against the *pre*-race file and the second
+    ``os.replace`` silently drops the first writer's keys.  Locking is
+    best-effort: on platforms without ``fcntl`` the context is a no-op and
+    saves fall back to the documented last-writer-wins-per-key race."""
+    if fcntl is None:                   # pragma: no cover - non-POSIX
+        yield
+        return
+    lock_path = os.path.abspath(path) + ".lock"
+    os.makedirs(os.path.dirname(lock_path), exist_ok=True)
+    with open(lock_path, "w") as f:
+        fcntl.flock(f, fcntl.LOCK_EX)
+        try:
+            yield
+        finally:
+            fcntl.flock(f, fcntl.LOCK_UN)
 
 
 def default_cache_path() -> str:
@@ -142,10 +172,14 @@ class JsonStore:
         return self._entries
 
     def save(self) -> None:
-        # Merge-on-save: re-read the file so entries another process stored
-        # since our first load survive (last writer wins per *key*, not per
-        # file).  Simultaneous writes still race, but os.replace keeps the
-        # file valid and only the colliding keys can be lost.
+        # Merge-on-save under the advisory file lock: re-read the file so
+        # entries another process stored since our first load survive (last
+        # writer wins per *key*, not per file), and no concurrent save can
+        # interleave between the re-read and the atomic replace.
+        with file_lock(self.path):
+            self._save_locked()
+
+    def _save_locked(self) -> None:
         ours = dict(self.load())
         entries = type(self)(self.path).load()
         entries.update(ours)

@@ -50,14 +50,105 @@ from .space import Config, ParamApproach
 # --------------------------------------------------------------------------- #
 
 
+@dataclass
+class EvalStats:
+    """Throughput counters one evaluator accumulates across a search (the
+    ``tune --json`` per-case counters and the ``bench_search`` lanes)."""
+
+    evals: int = 0           # configs scored (scalar + batch)
+    guard_rejects: int = 0   # rejected by the tile-count guard (inf)
+    memo_hits: int = 0       # scored via the schedule-key memo (no schedule)
+    fresh: int = 0           # from-scratch schedules
+    delta: int = 0           # incremental (anchor-resumed) schedules
+    schedule_s: float = 0.0  # wall time in guard + scheduling
+    predict_s: float = 0.0   # wall time in learned prediction
+
+    def as_dict(self) -> dict:
+        return {"evals": self.evals, "guard_rejects": self.guard_rejects,
+                "memo_hits": self.memo_hits, "fresh": self.fresh,
+                "delta": self.delta,
+                "schedule_s": round(self.schedule_s, 6),
+                "predict_s": round(self.predict_s, 6)}
+
+
 class CostModelEvaluator:
-    """Score a config by the modeled makespan of its ``CompiledKernel``."""
+    """Score a config by the modeled makespan of its ``CompiledKernel``.
+
+    ``evaluate_many`` is the throughput tier: the feasibility guard runs
+    vectorized over the whole population (``repro.search.batch``), configs
+    that alias to the same schedule key are scored once, and fresh keys go
+    through the incremental ``DeltaScheduler`` so local-walk neighbors reuse
+    the parent schedule's unchanged instruction prefix.  Scores are
+    bit-identical to the scalar ``__call__`` path on every config.
+    """
 
     def __init__(self, selection: Selection, graph: SystemGraph,
-                 max_tiles: int = 4096):
+                 max_tiles: int = 4096, incremental: bool = True):
         self.sel = selection
         self.graph = graph
         self.max_tiles = max_tiles
+        self.incremental = incremental
+        self.stats = EvalStats()
+        self._plan = None
+        self._delta = None
+        self._memo: dict[tuple, float] = {}
+
+    @property
+    def plan(self):
+        """Lazy ``BatchPlan`` (selection-static guard/key analysis)."""
+        if self._plan is None:
+            from .batch import BatchPlan
+            self._plan = BatchPlan(self.sel, self.graph)
+        return self._plan
+
+    def evaluate_many(self, configs) -> list[float]:
+        """Population scoring: one vectorized guard pass, one schedule per
+        *distinct schedule key* (memoized), incremental re-scheduling for
+        keys sharing an instruction prefix with a scheduled anchor."""
+        configs = list(configs)
+        if not configs:
+            return []
+        t0 = time.perf_counter()
+        feasible, keys = self.plan.analyze(configs, self.max_tiles)
+        out: list[float] = []
+        for cfg, ok, key in zip(configs, feasible, keys):
+            self.stats.evals += 1
+            if not ok:
+                self.stats.guard_rejects += 1
+                out.append(float("inf"))
+                continue
+            cost = self._memo.get(key)
+            if cost is None:
+                cost = self._schedule_cost(key, cfg)
+                self._memo[key] = cost
+            else:
+                self.stats.memo_hits += 1
+            out.append(cost)
+        self.stats.schedule_s += time.perf_counter() - t0
+        return out
+
+    def _schedule_cost(self, key: tuple, config: Config) -> float:
+        """Modeled makespan for one distinct schedule key (== the cost
+        ``compile(config).cost`` would report: Pipeline.assemble sets the
+        artifact cost to the schedule makespan)."""
+        from ..core.scheduler import ScheduleError, schedule
+        if self.plan.unschedulable:
+            return float("inf")     # some instr has no device: compile fails
+        approach = ParamApproach(config)
+        try:
+            if self.incremental:
+                if self._delta is None:
+                    from ..compile.driver import DeltaScheduler
+                    self._delta = DeltaScheduler(self.sel, self.graph)
+                sched = self._delta.schedule_for(approach, key)
+                self.stats.fresh = self._delta.stats["fresh"]
+                self.stats.delta = self._delta.stats["delta"]
+            else:
+                sched = schedule(self.sel, self.graph, approach)
+                self.stats.fresh += 1
+            return float(sched.makespan)
+        except (CompileError, ScheduleError):
+            return float("inf")
 
     def estimated_tiles(self, approach: Approach) -> int:
         """Upper-bound the compute-tile count the scheduler would unroll,
@@ -93,13 +184,21 @@ class CostModelEvaluator:
         return self.compile(config).schedule
 
     def __call__(self, config: Config) -> float:
-        approach = ParamApproach(config)
-        if self.estimated_tiles(approach) > self.max_tiles:
-            return float("inf")
+        t0 = time.perf_counter()
+        self.stats.evals += 1
         try:
-            return self.compile(config).cost
-        except CompileError:
-            return float("inf")
+            approach = ParamApproach(config)
+            if self.estimated_tiles(approach) > self.max_tiles:
+                self.stats.guard_rejects += 1
+                return float("inf")
+            try:
+                cost = self.compile(config).cost
+            except CompileError:
+                return float("inf")
+            self.stats.fresh += 1
+            return cost
+        finally:
+            self.stats.schedule_s += time.perf_counter() - t0
 
 
 class LearnedEvaluator:
@@ -128,6 +227,12 @@ class LearnedEvaluator:
                                          max_tiles=max_tiles)
         self._predict = model.predictor(selection.program, graph,
                                         role_extents(selection))
+        self.stats = self._guard.stats
+        #: config key -> guard verdict.  Surrogate search scores the same
+        #: configs repeatedly (pool ranking, then the neighbor walk, then
+        #: the final sweep); without the memo every ranking pays the
+        #: tile-count guard again for every config it has already screened.
+        self._feas: dict[tuple, bool] = {}
 
     @classmethod
     def for_selection(cls, selection: Selection, graph: SystemGraph,
@@ -158,21 +263,51 @@ class LearnedEvaluator:
         return [dict(c) for c in self.model.meta.get("anchors", [])]
 
     def _feasible(self, config: Config) -> bool:
-        return self._guard.estimated_tiles(ParamApproach(config)) \
-            <= self._guard.max_tiles
+        from .space import config_key
+        k = config_key(config)
+        got = self._feas.get(k)
+        if got is None:
+            got = self._feas[k] = bool(
+                self._guard.estimated_tiles(ParamApproach(config))
+                <= self._guard.max_tiles)
+        return got
+
+    def _feasible_many(self, configs: list) -> list[bool]:
+        """Memoized batch guard: unseen configs go through the vectorized
+        ``BatchPlan`` guard in one pass; seen configs are dict lookups."""
+        from .space import config_key
+        keys = [config_key(c) for c in configs]
+        todo = [(c, k) for c, k in zip(configs, keys) if k not in self._feas]
+        if todo:
+            feas, _ = self._guard.plan.analyze([c for c, _ in todo],
+                                               self._guard.max_tiles)
+            for (_, k), ok in zip(todo, feas):
+                self._feas[k] = bool(ok)
+        return [self._feas[k] for k in keys]
 
     def predict_many(self, configs) -> list[float]:
         """Guarded batch prediction: infeasible configs score ``inf`` so a
         pool ranking can never put them in front of real-budget trials."""
         configs = list(configs)
+        t0 = time.perf_counter()
         scores = self._predict.predict_many(configs)
-        return [float(s) if self._feasible(c) else float("inf")
-                for c, s in zip(configs, scores)]
+        self.stats.predict_s += time.perf_counter() - t0
+        self.stats.evals += len(configs)
+        feasible = self._feasible_many(configs)
+        self.stats.guard_rejects += sum(1 for ok in feasible if not ok)
+        return [float(s) if ok else float("inf")
+                for ok, s in zip(feasible, scores)]
 
     def __call__(self, config: Config) -> float:
+        self.stats.evals += 1
         if not self._feasible(config):
+            self.stats.guard_rejects += 1
             return float("inf")
-        return self._predict(config)
+        t0 = time.perf_counter()
+        try:
+            return self._predict(config)
+        finally:
+            self.stats.predict_s += time.perf_counter() - t0
 
 
 def gemm_tile_for(config: Config, graph: SystemGraph,

@@ -53,12 +53,54 @@ class SearchOutcome:
         return self.baseline_cost / self.best_cost
 
 
+class _Scorer:
+    """Batched scoring front-end.
+
+    When the evaluator exposes ``evaluate_many`` (``CostModelEvaluator``),
+    populations go through it in one call — vectorized guard, schedule-key
+    memoization, incremental re-scheduling — and the per-config scores land
+    in a local cache the scalar path reads back.  Scores are identical to
+    calling ``evaluate(config)`` directly (the batch tier's contract), so
+    strategies that prefetch stay bit-identical to the sequential path.
+    """
+
+    def __init__(self, evaluate: Evaluator):
+        self.evaluate = evaluate
+        self.many = getattr(evaluate, "evaluate_many", None)
+        self.cache: dict[tuple, float] = {}
+
+    def prefetch(self, configs: list[Config]) -> None:
+        """Score a population ahead of the runner's walk (no-op for scalar
+        evaluators — nothing would be saved by batching them)."""
+        if self.many is None:
+            return
+        todo, seen = [], set()
+        for c in configs:
+            k = config_key(c)
+            if k not in self.cache and k not in seen:
+                seen.add(k)
+                todo.append(c)
+        if todo:
+            for c, s in zip(todo, self.many(todo)):
+                self.cache[config_key(c)] = float(s)
+
+    def __call__(self, config: Config) -> float:
+        k = config_key(config)
+        got = self.cache.get(k)
+        if got is None:
+            got = float(self.many([config])[0] if self.many is not None
+                        else self.evaluate(config))
+            self.cache[k] = got
+        return got
+
+
 class _Runner:
     """Shared bookkeeping: dedup, trial log, best tracking."""
 
     def __init__(self, space: SearchSpace, evaluate: Evaluator, trials: int):
         self.space = space
         self.evaluate = evaluate
+        self.scorer = _Scorer(evaluate)
         self.budget = max(1, trials)
         self.seen: set[tuple] = set()
         self.trials: list[Trial] = []
@@ -68,13 +110,16 @@ class _Runner:
     def exhausted(self) -> bool:
         return len(self.trials) >= self.budget
 
+    def prefetch(self, configs: list[Config]) -> None:
+        self.scorer.prefetch(configs)
+
     def run(self, config: Config) -> Trial | None:
         """Evaluate ``config`` unless duplicate / over budget."""
         key = config_key(config)
         if key in self.seen or self.exhausted:
             return None
         self.seen.add(key)
-        cost = float(self.evaluate(config))
+        cost = self.scorer(config)
         t = Trial(len(self.trials), dict(config), cost)
         self.trials.append(t)
         if self.best is None or cost < self.best.cost:
@@ -93,14 +138,30 @@ class _Runner:
 
 def random_search(space: SearchSpace, evaluate: Evaluator,
                   trials: int = 32, seed: int = 0) -> SearchOutcome:
-    """Baseline + uniform random sampling of distinct configs."""
+    """Baseline + uniform random sampling of distinct configs.
+
+    The candidate stream and the accept/reject decisions are both
+    cost-independent (the loop stops on budget / attempt count / dedupe
+    only), so the exact consumed prefix is simulated up front and scored as
+    one population; the runner walk below replays the sequential loop's
+    decisions bit-identically."""
     rng = random.Random(seed)
     r = _Runner(space, evaluate, trials)
-    r.run(space.baseline())
-    attempts = 0
-    while not r.exhausted and attempts < trials * 50:
+    base = space.baseline()
+    sim_seen = {config_key(base)}
+    n_trials, attempts, consumed = 1, 0, []
+    while n_trials < r.budget and attempts < trials * 50:
         attempts += 1
-        r.run(space.random_config(rng))
+        c = space.random_config(rng)
+        consumed.append(c)
+        k = config_key(c)
+        if k not in sim_seen:
+            sim_seen.add(k)
+            n_trials += 1
+    r.prefetch([base] + consumed)
+    r.run(base)
+    for c in consumed:
+        r.run(c)
     return r.outcome("random")
 
 
@@ -120,7 +181,16 @@ def hill_climb(space: SearchSpace, evaluate: Evaluator,
     rng = random.Random(seed)
     r = _Runner(space, evaluate, trials)
     current = r.run(space.baseline())
-    frontier = space.neighbors(current.config)
+
+    def recenter(config: Config):
+        """Materialize + batch-score the incumbent's neighborhood (which
+        neighbors actually *run* still depends on the walk, but scoring the
+        frontier as one population is what the throughput tier is for)."""
+        neigh = list(space.neighbors(config))
+        r.prefetch(neigh)
+        return iter(neigh)
+
+    frontier = recenter(current.config)
     attempts = 0
     while not r.exhausted and attempts < trials * 50:
         attempts += 1
@@ -129,12 +199,12 @@ def hill_climb(space: SearchSpace, evaluate: Evaluator,
             restart = r.run(space.random_config(rng))
             if restart is not None:
                 current = restart
-                frontier = space.neighbors(current.config)
+                frontier = recenter(current.config)
             continue
         t = r.run(cand)
         if t is not None and t.cost < current.cost:
             current = t
-            frontier = space.neighbors(current.config)
+            frontier = recenter(current.config)
     return r.outcome("hillclimb")
 
 
@@ -145,23 +215,53 @@ def evolutionary(space: SearchSpace, evaluate: Evaluator,
 
     Generation 0 is the baseline plus random configs; each later generation
     keeps the ``elite`` best evaluated so far as parents and fills the
-    population with crossovers + mutations of the parents."""
+    population with crossovers + mutations of the parents.
+
+    Each generation is drawn in full before any of it is scored: within a
+    generation the parents are fixed and a child's accept/reject depends
+    only on dedupe (never on its cost), so the rng stream and the accepted
+    set are simulated exactly, the batch goes through the evaluator as one
+    population, and the runner replays the sequential decisions
+    bit-identically.
+    """
     rng = random.Random(seed)
     r = _Runner(space, evaluate, trials)
-    r.run(space.baseline())
+    base = space.baseline()
+    gen0, sim_seen, sim_trials = [], {config_key(base)}, 1
     for _ in range(population - 1):
-        if r.exhausted:
+        if sim_trials >= r.budget:
             break
-        r.run(space.random_config(rng))
+        c = space.random_config(rng)
+        gen0.append(c)
+        k = config_key(c)
+        if k not in sim_seen:
+            sim_seen.add(k)
+            sim_trials += 1
+    r.prefetch([base] + gen0)
+    r.run(base)
+    for c in gen0:
+        r.run(c)
     attempts = 0
     while not r.exhausted and attempts < trials * 50:
         parents = sorted(r.trials, key=lambda t: (t.cost, t.index))[:elite]
-        made = 0
-        while made < population and not r.exhausted and attempts < trials * 50:
-            attempts += 1
+        sim_seen = set(r.seen)
+        sim_trials = len(r.trials)
+        batch, made = [], 0
+        while made < population and sim_trials < r.budget \
+                and attempts + len(batch) < trials * 50:
             pa, pb = rng.choice(parents), rng.choice(parents)
             child = space.crossover(pa.config, pb.config, rng)
             child = space.mutate(child, rng, n_mutations=1)
+            batch.append(child)
+            k = config_key(child)
+            if k not in sim_seen:
+                sim_seen.add(k)
+                sim_trials += 1
+                made += 1
+        r.prefetch(batch)
+        made = 0
+        for child in batch:
+            attempts += 1
             if r.run(child) is not None:
                 made += 1
         if made == 0:       # space exhausted around the elites
@@ -223,6 +323,7 @@ def surrogate_search(space: SearchSpace, evaluate: Evaluator,
         sseeds = [dict(s) for s in seeds]
         s_scores = _predict_all(predict, sseeds)
         seed_budget = 1 + max(1, (trials - 1) // 2)
+        r.prefetch(sseeds)
         for _, cand in sorted(zip(s_scores, sseeds), key=_rank_key):
             if len(r.trials) >= min(seed_budget, r.budget):
                 break
@@ -232,7 +333,13 @@ def surrogate_search(space: SearchSpace, evaluate: Evaluator,
     global_budget = max(1, (trials - 1) // 3)
     assert r.best is not None
     current = r.best
-    frontier = _ordered_neighbors(space, predict, current.config, r.seen)
+
+    def recenter(config: Config):
+        frontier = _ordered_neighbors(space, predict, config, r.seen)
+        r.prefetch(frontier)
+        return iter(frontier)
+
+    frontier = recenter(current.config)
     while len(r.trials) < r.budget - global_budget:
         cand = next(frontier, None)
         if cand is None:               # neighborhood exhausted: local optimum
@@ -240,8 +347,7 @@ def surrogate_search(space: SearchSpace, evaluate: Evaluator,
         t = r.run(cand)
         if t is not None and t.cost < current.cost:
             current = t                # first improvement: re-center
-            frontier = _ordered_neighbors(space, predict, current.config,
-                                          r.seen)
+            frontier = recenter(current.config)
 
     # -- phase 3: global top-predicted probes ------------------------------
     if space.size() <= SURROGATE_POOL_CAP:
@@ -256,7 +362,11 @@ def surrogate_search(space: SearchSpace, evaluate: Evaluator,
                 candidates.append(c)
     candidates = [c for c in candidates if config_key(c) not in r.seen]
     scores = _predict_all(predict, candidates)
-    for _, cand in sorted(zip(scores, candidates), key=_rank_key):
+    ranked = [c for _, c in sorted(zip(scores, candidates), key=_rank_key)]
+    # the candidates are distinct and unseen, so exactly the remaining
+    # budget's worth will run — batch-score just that prefix
+    r.prefetch(ranked[:max(0, r.budget - len(r.trials))])
+    for cand in ranked:
         if r.exhausted:
             break
         r.run(cand)
@@ -264,12 +374,12 @@ def surrogate_search(space: SearchSpace, evaluate: Evaluator,
 
 
 def _ordered_neighbors(space: SearchSpace, predict, config: Config,
-                       seen: set) -> "Iterator[Config]":
+                       seen: set) -> list[Config]:
     """The unseen single-mutation neighborhood of ``config``, best-predicted
     first (deterministic ties — see ``_rank_key``)."""
     neigh = [c for c in space.neighbors(config) if config_key(c) not in seen]
     scores = _predict_all(predict, neigh)
-    return iter([c for _, c in sorted(zip(scores, neigh), key=_rank_key)])
+    return [c for _, c in sorted(zip(scores, neigh), key=_rank_key)]
 
 
 def _rank_key(sc):

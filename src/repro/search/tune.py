@@ -145,6 +145,7 @@ class CaseReport:
     validation: ValidationReport | None
     elapsed_s: float
     config: dict = field(default_factory=dict)
+    counters: dict = field(default_factory=dict)  # evaluator EvalStats + rates
 
     @property
     def ok(self) -> bool:
@@ -169,6 +170,7 @@ class CaseReport:
             "max_abs_err": None if self.validation is None
             else self.validation.max_abs_err,
             "elapsed_s": round(self.elapsed_s, 3),
+            "counters": self.counters,
         }
 
 
@@ -245,7 +247,27 @@ def tune_case(case: TuneCase, graph: SystemGraph, strategy: str,
                       greedy_cost=greedy_cost, tuned_cost=tuned_cost,
                       outcome=outcome, validation=validation,
                       elapsed_s=time.time() - t0,
-                      config=dict(outcome.best_config))
+                      config=dict(outcome.best_config),
+                      counters=_case_counters(cost_eval, predict))
+
+
+def _case_counters(cost_eval: CostModelEvaluator, predict=None) -> dict:
+    """Per-case throughput counters for ``--json`` rows: the cost
+    evaluator's ``EvalStats`` (evals, guard rejects, schedule-key memo hits,
+    fresh vs incremental schedules, schedule/predict wall split) plus the
+    surrogate predictor's prediction time when one ranked the pool, and the
+    resulting configs/sec over the evaluator's own wall time."""
+    counters = cost_eval.stats.as_dict()
+    if predict is not None and getattr(predict, "stats", None) is not None \
+            and predict.stats is not cost_eval.stats:
+        counters["evals"] += predict.stats.evals
+        counters["guard_rejects"] += predict.stats.guard_rejects
+        counters["predict_s"] = round(
+            counters["predict_s"] + predict.stats.predict_s, 6)
+    wall = counters["schedule_s"] + counters["predict_s"]
+    counters["configs_per_sec"] = (round(counters["evals"] / wall, 1)
+                                   if wall > 0 else 0.0)
+    return counters
 
 
 def tune_fabric_case(m: int, n: int, k: int, topo, strategy: str,
@@ -312,6 +334,34 @@ def record_for(case: TuneCase, report: CaseReport, graph: SystemGraph,
                                / max(report.tuned_cost, 1e-30), 4)})
 
 
+def _tune_worker(payload: dict) -> tuple[int, CaseReport]:
+    """One ``--workers`` subprocess unit: rebuild the case from the suite
+    descriptor (programs/selections are cheap to rebuild and the descriptor
+    is trivially picklable, unlike a live Selection closure) and tune it.
+    Returns ``(case index, report)`` so the parent merges reports — and
+    cache records — in deterministic case order regardless of which worker
+    finishes first."""
+    idx = payload["idx"]
+    if payload["suite"] == "fabric":
+        from ..fabric.topology import make_topology
+        topo = make_topology(payload["topology"], payload["chips"])
+        m, n, k = payload["shape"]
+        return idx, tune_fabric_case(m, n, k, topo, payload["strategy"],
+                                     payload["trials"], payload["seed"],
+                                     validate=payload["validate"])
+    case = build_cases(payload["suite"], payload["limit"])[idx]
+    model_store = None
+    if payload["backend"] == "learned":
+        from .model import ModelStore
+        model_store = ModelStore(payload["model"])
+    return idx, tune_case(case, make_graph(payload["graph"]),
+                          payload["strategy"], payload["trials"],
+                          payload["seed"], payload["backend"],
+                          validate=payload["validate"],
+                          model_store=model_store,
+                          strategy_explicit=payload["strategy_explicit"])
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.search.tune",
@@ -342,6 +392,11 @@ def main(argv=None) -> int:
     ap.add_argument("--cache", default=None,
                     help=f"cache path (default {default_cache_path()})")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=1,
+                    help="tune cases in N parallel processes; per-case "
+                         "results are bit-identical to --workers 1 and "
+                         "reports/cache records merge in deterministic "
+                         "case order")
     ap.add_argument("--limit", type=int, default=None,
                     help="tune only the first N cases of the suite")
     ap.add_argument("--no-validate", action="store_true")
@@ -380,6 +435,11 @@ def main(argv=None) -> int:
                      m, n, k, topo, strategy, args.trials, args.seed,
                      validate=not args.no_validate))
                 for m, n, k in shapes]
+        payloads = [{"idx": i, "suite": "fabric", "shape": shapes[i],
+                     "topology": args.topology, "chips": args.chips,
+                     "strategy": strategy, "trials": args.trials,
+                     "seed": args.seed, "validate": not args.no_validate}
+                    for i in range(len(shapes))]
         recorder = lambda rep: fabric_record_for(  # noqa: E731
             rep, topo, rep.outcome.strategy)
     else:
@@ -406,26 +466,45 @@ def main(argv=None) -> int:
                              validate=not args.no_validate,
                              model_store=model_store,
                              strategy_explicit=args.strategy is not None)))
+        payloads = [{"idx": i, "suite": args.suite, "limit": args.limit,
+                     "graph": args.graph, "strategy": strategy,
+                     "trials": args.trials, "seed": args.seed,
+                     "backend": args.backend, "model": args.model,
+                     "validate": not args.no_validate,
+                     "strategy_explicit": args.strategy is not None}
+                    for i in range(len(cases))]
         # Provenance from the outcome, not the CLI flag: --backend
         # learned swaps the strategy to 'surrogate' per case.
         recorder = lambda rep: record_for(  # noqa: E731
             by_name[rep.name], rep, graph, rep.outcome.strategy)
 
-    for name, run in runs:
-        rep = run()
+    def emit(rep: CaseReport) -> None:
         reports.append(rep)
         cache.store(recorder(rep), save=False)
         v = rep.validation
         vtxt = ("-" if v is None else
                 ("exact" if v.exact else f"err={v.max_abs_err:.2e}"))
         status = "ok" if rep.ok else "FAIL"
-        if not rep.ok:
-            failures += 1
         print(f"[{status}] {rep.name}: greedy={rep.greedy_cost:.3e}s "
               f"tuned={rep.tuned_cost:.3e}s "
               f"speedup={rep.greedy_cost / max(rep.tuned_cost, 1e-30):.2f}x "
               f"oracle={vtxt} ({rep.outcome.evaluations} trials, "
               f"{rep.elapsed_s:.1f}s)", flush=True)
+
+    if args.workers > 1:
+        # Fan cases across processes; collect by index so reports and cache
+        # records land in the same order a sequential run produces (the
+        # cache file diffs empty against --workers 1).
+        from concurrent.futures import ProcessPoolExecutor
+        print(f"# workers: {args.workers}")
+        with ProcessPoolExecutor(max_workers=args.workers) as ex:
+            done = dict(ex.map(_tune_worker, payloads))
+        for i in range(len(payloads)):
+            emit(done[i])
+    else:
+        for _name, run in runs:
+            emit(run())
+    failures = sum(1 for r in reports if not r.ok)
     cache.save()
     print(f"# wrote {len(reports)} record(s) to {cache.path}")
 

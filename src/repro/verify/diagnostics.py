@@ -53,6 +53,9 @@ RULES: dict[str, str] = {
     "sch.output-not-home": "final output regions must reside at their home "
                            "memory in the latest version",
     "sch.residency": "final_residency must agree with the replayed state",
+    "sch.tile-mismatch": "a schedule's per-instruction compute tiles must "
+                         "match what the approach resolves for the "
+                         "selection (stale incremental reuse)",
     # fabric checker (verify/fabric.py)
     "fab.cycle": "collective/task dependency graphs must be acyclic",
     "fab.unknown-dep": "tasks must depend only on known tasks",

@@ -22,7 +22,7 @@ from dataclasses import dataclass, field, replace
 from ..core.scheduler import Region
 from .diagnostics import RULES, Diagnostic, DiagnosticReport
 from .program import verify_program
-from .schedule import verify_schedule
+from .schedule import verify_reschedule, verify_schedule
 from .selection import verify_selection
 
 # --------------------------------------------------------------------------- #
@@ -48,6 +48,10 @@ class Bundle:
     budget: int = 0
     trace: dict = field(default_factory=dict)   # repro.serve run trace
     trace2: dict = field(default_factory=dict)  # its bit-identical twin
+    sysgraph: object = None               # SystemGraph (incremental kind)
+    parent_schedule: object = None        # anchor schedule to resume from
+    segments: dict = field(default_factory=dict)  # idx -> (op count, state)
+    first_changed: int = 0                # first instr whose tile differs
 
 
 _BASE: dict[str, Bundle] = {}
@@ -121,6 +125,33 @@ def _serve_bundle() -> Bundle:
     return copy.deepcopy(_BASE["serve"])
 
 
+def _incremental_bundle() -> Bundle:
+    """A real incremental re-schedule: a heterogeneous GRU (input dim !=
+    hidden dim) whose first matmul's reduction (k=64, below the hardware
+    tile) is cap-invariant, so a ``tile_k`` change shares an unchanged
+    instruction-0 prefix with the baseline anchor — ``first_changed`` is 1
+    and the child schedule genuinely resumes mid-stream."""
+    if "incremental" not in _BASE:
+        from ..compile.driver import gru_selection
+        from ..core.scheduler import (schedule_incremental,
+                                      schedule_with_segments)
+        from ..core.sysgraph import tpu_v5e
+        from ..search.space import ParamApproach, SearchSpace
+        graph = tpu_v5e(1)
+        _, sel = gru_selection(4, 256, 64)
+        base = SearchSpace.for_graph(graph).baseline()
+        parent, segments = schedule_with_segments(sel, graph,
+                                                  ParamApproach(base))
+        child_ap = ParamApproach(dict(base, tile_k=128))
+        child, _ = schedule_incremental(sel, graph, child_ap, parent,
+                                        segments, 1)
+        _BASE["incremental"] = Bundle(
+            program=sel.program, selection=sel, schedule=child,
+            approach=child_ap, sysgraph=graph, parent_schedule=parent,
+            segments=segments, first_changed=1)
+    return copy.deepcopy(_BASE["incremental"])
+
+
 # --------------------------------------------------------------------------- #
 # Registry
 # --------------------------------------------------------------------------- #
@@ -149,6 +180,9 @@ def _verify_bundle(b: Bundle) -> list[Diagnostic]:
         diags.extend(verify_selection(b.selection, b.approach))
     if b.schedule is not None:
         diags.extend(verify_schedule(b.schedule, b.approach))
+        if b.selection is not None and b.approach is not None:
+            diags.extend(verify_reschedule(b.schedule, b.selection,
+                                           b.approach))
     if b.kgraph is not None:
         from .graph import verify_graph, verify_placement
         diags.extend(verify_graph(b.kgraph))
@@ -332,6 +366,41 @@ def _mut_drop_writeback(b: Bundle):
     wb = [op for op in sched.ops if op.kind == "writeback"][-1]
     sched.ops = [op for op in sched.ops if op.uid != wb.uid]
     sched.final_residency.pop((wb.region.buffer, wb.region.bounds), None)
+
+
+# -- incremental re-scheduling ---------------------------------------------- #
+
+
+@mutation("inc-stale-stream", "sch.tile-mismatch", kind="incremental")
+def _mut_inc_stale_stream(b: Bundle):
+    # Resume one instruction too late: the parent's op stream for the
+    # instruction whose tile actually changed is kept verbatim.  The splice
+    # is *self-consistent* — every copy precedes its read, every version
+    # chain checks out — so the sch.* replay stays silent; only recomputing
+    # the expected tiling (verify_reschedule) can flag the stale reuse.
+    from ..core.scheduler import schedule_incremental
+    bad, _ = schedule_incremental(b.selection, b.sysgraph, b.approach,
+                                  b.parent_schedule, b.segments,
+                                  b.first_changed + 1)
+    return (verify_schedule(bad, b.approach)
+            + verify_reschedule(bad, b.selection, b.approach, b.sysgraph))
+
+
+@mutation("inc-wrong-instr", "sch.residency", kind="incremental")
+def _mut_inc_wrong_instr(b: Bundle):
+    # Apply the delta at the wrong op boundary: keep the resume *state* of
+    # the changed instruction but truncate the parent prefix short of it —
+    # ops whose effects the state already claims never appear in the
+    # stream, so the replayed residency disagrees with final_residency.
+    from ..core.scheduler import schedule_incremental
+    boundary, snap = b.segments[b.first_changed - 1]
+    bad_segments = dict(b.segments)
+    bad_segments[b.first_changed - 1] = (max(0, boundary - 4), snap)
+    bad, _ = schedule_incremental(b.selection, b.sysgraph, b.approach,
+                                  b.parent_schedule, bad_segments,
+                                  b.first_changed)
+    return (verify_schedule(bad, b.approach)
+            + verify_reschedule(bad, b.selection, b.approach, b.sysgraph))
 
 
 # -- fabric layer ----------------------------------------------------------- #
@@ -535,7 +604,8 @@ class MutationResult:
 
 
 _BUNDLES = {"gemm": _gemm_bundle, "fabric": _fabric_bundle,
-            "graph": _graph_bundle, "serve": _serve_bundle}
+            "graph": _graph_bundle, "serve": _serve_bundle,
+            "incremental": _incremental_bundle}
 
 
 def run_mutation(name: str) -> MutationResult:
@@ -563,4 +633,5 @@ def baseline_report() -> DiagnosticReport:
     report.extend(verify_task_graph(fb.tasks))
     report.extend(_verify_bundle(_graph_bundle()))
     report.extend(_verify_bundle(_serve_bundle()))
+    report.extend(_verify_bundle(_incremental_bundle()))
     return report

@@ -25,6 +25,8 @@ the mutation harness + golden suites pin down.
 """
 from __future__ import annotations
 
+from collections import Counter
+
 from ..core.scheduler import Region, Schedule, _bounds_overlap
 from .diagnostics import Diagnostic, diag
 
@@ -118,6 +120,65 @@ def verify_schedule(sched: Schedule, approach=None) -> list[Diagnostic]:
                 f"{op.kind!r}", subject=op.kind, uid=op.uid))
 
     diags.extend(_check_final_state(rp))
+    return diags
+
+
+def verify_reschedule(sched: Schedule, selection, approach,
+                      graph=None) -> list[Diagnostic]:
+    """Check a schedule's compute tiles against what ``approach`` resolves
+    for ``selection`` from scratch (``sch.tile-mismatch``).
+
+    This closes the one hole incremental re-scheduling opens that the
+    replay above cannot see: a stale-stream splice — a resumed schedule
+    that kept a parent's ops for an instruction whose tile changed — is
+    *self-consistent* (every copy precedes its read, every version chain
+    checks out), it just computes the wrong tiling.  Only recomputing the
+    expected per-instruction tile multiset can flag it.  Comparison is by
+    multiset of (offsets, sizes) per ``instr_idx``, so it is independent of
+    unroll order and of which device each tile landed on."""
+    g = graph if graph is not None else sched.graph
+    from ..core.scheduler import Scheduler
+
+    def tkey(t) -> tuple:
+        return (tuple(sorted(t.offsets.items())),
+                tuple(sorted(t.sizes.items())))
+
+    try:
+        sch = Scheduler(selection, g, approach)
+        expected: dict[int, Counter] = {}
+        for idx, si in enumerate(selection.instrs):
+            devices = g.compute_nodes_for(si.needle.name)
+            if not devices:
+                return []    # unschedulable selection: nothing to compare
+            expected[idx] = Counter(
+                tkey(t) for t in
+                sch._tiles_for(idx, si, devices[0].matmul_tile))
+    except Exception:
+        return []            # expectation not computable — not this rule
+    got: dict[int, Counter] = {idx: Counter() for idx in expected}
+    for op in sched.ops:
+        if op.kind != "compute" or op.tile is None:
+            continue
+        got.setdefault(op.tile.instr_idx, Counter())[tkey(op.tile)] += 1
+
+    diags: list[Diagnostic] = []
+    for idx in sorted(got):
+        e = expected.get(idx)
+        if e is None:
+            diags.append(diag(
+                "sch.tile-mismatch",
+                f"compute ops reference instruction {idx}, which the "
+                f"selection does not have", subject=str(idx)))
+            continue
+        if e != got[idx]:
+            missing = sum((e - got[idx]).values())
+            extra = sum((got[idx] - e).values())
+            diags.append(diag(
+                "sch.tile-mismatch",
+                f"instruction {idx}: schedule's compute tiles do not match "
+                f"the approach's resolved tiling ({missing} expected "
+                f"tile(s) missing, {extra} unexpected — stale incremental "
+                f"reuse?)", subject=str(idx)))
     return diags
 
 

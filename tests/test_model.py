@@ -427,7 +427,7 @@ def test_committed_ci_baseline_is_valid():
     data = json.load(open(path))
     assert data["failures"] == 0
     suites = {r["suite"] for r in data["rows"]}
-    assert suites == {"tuned", "fabric", "graph", "serve"}
+    assert suites == {"tuned", "fabric", "graph", "serve", "search"}
     assert all(r["us_per_call"] > 0 for r in data["rows"])
 
 
