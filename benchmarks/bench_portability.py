@@ -1,0 +1,63 @@
+"""Cross-backend roofline suite — the same ISAMIR programs compiled onto
+every registered hardware target (the paper's hardware-agnosticity claim,
+measured).
+
+Each DeepBench GEMM shape and each conv->matmul extraction case is built
+ONCE as an ISAMIR program + instruction selection, then costed per target
+with that target's own ``SystemGraph`` (tpu_v5e vs the modeled gpu_sm
+cluster machine): the tile sizes, staging budgets and bandwidths all come
+from the graph, nothing in the program changes.  Rows report the modeled
+makespan plus the fraction of the target's peak FLOP/s the mapping
+sustains — comparable utilization numbers across backends, which is the
+portability statement.
+
+Rows carry the target name as a 4th element, so ``run.py`` keys the perf
+baseline per (suite, name, target): a gpu row can never be silently
+compared against a tpu baseline row.
+
+CSV: name, us_per_call = greedy modeled time (us), derived =
+"util=<frac of peak>/flops=<workload flops>/peak=<target flop/s>".
+"""
+from __future__ import annotations
+
+from repro.compile import conv_selection, gemm_selection
+from repro.core.sysgraph import resolve_target
+from repro.search.evaluate import CostModelEvaluator
+from repro.search.space import SearchSpace
+from repro.search.tune import CONV_CASES, DEEPBENCH_GEMM_SIZES
+
+#: targets the suite sweeps (every registered family with a modeled graph).
+PORTABILITY_TARGETS = ("tpu_v5e", "gpu_sm")
+
+
+def _cases():
+    """(name, selection, workload flops) — built once, shared across
+    targets."""
+    cases = []
+    for m, n, k in DEEPBENCH_GEMM_SIZES:
+        _, sel = gemm_selection(m, n, k)
+        cases.append((f"gemm_{m}x{n}x{k}", sel, 2.0 * m * n * k))
+    for cname, kw in CONV_CASES:
+        _, sel = conv_selection(**kw)
+        flops = (2.0 * kw["batch"] * kw["h"] * kw["w"] * kw["cout"]
+                 * kw["kh"] * kw["kw"] * kw["cin"])
+        cases.append((f"{cname}_{kw['batch']}x{kw['h']}x{kw['w']}"
+                      f"x{kw['cin']}x{kw['cout']}", sel, flops))
+    return cases
+
+
+def run() -> list[tuple[str, float, str, str]]:
+    rows = []
+    cases = _cases()
+    for target in PORTABILITY_TARGETS:
+        graph = resolve_target(target)
+        peak = sum(c.flops_per_sec for c in graph.computes.values())
+        space = SearchSpace.for_graph(graph)
+        for name, sel, flops in cases:
+            evaluate = CostModelEvaluator(sel, graph)
+            cost = evaluate(space.baseline())
+            util = flops / (cost * peak) if cost > 0 else 0.0
+            rows.append((f"port_{name}", cost * 1e6,
+                         f"util={util:.4f}/flops={flops:.3e}/peak={peak:.3e}",
+                         target))
+    return rows

@@ -24,15 +24,18 @@ def load_records(art_dir: str = ART_DIR) -> list[dict]:
     return recs
 
 
-def run() -> list[tuple[str, float, str]]:
+def run() -> list[tuple[str, float, str, str]]:
     rows = []
     for rec in load_records():
         name = f"roofline_{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+        target = rec.get("target", "tpu_v5e")
         if rec.get("status") == "skipped":
-            rows.append((name, 0.0, "skipped=long_500k_full_attention"))
+            rows.append((name, 0.0, "skipped=long_500k_full_attention",
+                         target))
             continue
         if rec.get("status") != "ok":
-            rows.append((name, 0.0, f"error={rec.get('error', '?')[:60]}"))
+            rows.append((name, 0.0, f"error={rec.get('error', '?')[:60]}",
+                         target))
             continue
         r = rec["roofline"]
         ratio = rec.get("model_flops_ratio")
@@ -41,5 +44,5 @@ def run() -> list[tuple[str, float, str]]:
                    f"/mem={r['memory_s']:.3e}"
                    f"/coll={r['collective_s']:.3e}"
                    f"/useful={ratio:.3f}" if ratio is not None else "")
-        rows.append((name, r["roofline_s"] * 1e6, derived))
+        rows.append((name, r["roofline_s"] * 1e6, derived, target))
     return rows

@@ -8,13 +8,14 @@ rows (plus per-suite errors) as machine-readable JSON so the perf trajectory
 is comparable across PRs (e.g. ``BENCH_mapper.json``).
 
 ``--baseline`` turns the run into a **perf-regression gate**: every row of
-the baseline JSON must reappear (matched by suite + name) with
+the baseline JSON must reappear (matched by suite + name + hardware
+target, so a gpu row never gates against a tpu one) with
 ``us_per_call`` no more than ``--tolerance`` percent above the recorded
 value.  Missing rows and regressions fail the run (exit 1) with one line per
 violation; new rows not in the baseline are reported but pass — they become
 part of the baseline when it is next regenerated.  CI gates the
 deterministic modeled-cost suites (``tuned``, ``fabric``, ``graph``,
-``serve``)
+``serve``, ``portability``)
 against the committed ``benchmarks/baselines/BENCH_ci.json``; see README
 for how to update it.
 
@@ -53,6 +54,9 @@ SUITES = {
     "search": ("bench_search",
                "repro.search batched-evaluation throughput vs scalar "
                "(gated >= 10x)"),
+    "portability": ("bench_portability",
+                    "cross-backend roofline: DeepBench GEMM + conv on "
+                    "every hardware target"),
 }
 
 
@@ -75,11 +79,11 @@ def compare_to_baseline(records: list[dict], baseline: dict,
     serves both the full perf gate and single-suite lanes."""
     got = {}
     for r in records:
-        got[(r.get("suite"), r.get("name"))] = r
+        got[(r.get("suite"), r.get("name"), r.get("target", ""))] = r
     violations = []
     tol = 1.0 + tolerance_pct / 100.0
     for b in baseline.get("rows", []):
-        key = (b.get("suite"), b.get("name"))
+        key = (b.get("suite"), b.get("name"), b.get("target", ""))
         if ran_suites is not None and key[0] not in ran_suites:
             continue
         base_us = float(b.get("us_per_call", -1.0))
@@ -87,22 +91,23 @@ def compare_to_baseline(records: list[dict], baseline: dict,
             continue    # baseline recorded an error for this row: nothing
             # to gate — a later run that fixed the suite reports real rows
             # under real names, so the synthetic error key never matches
+        label = f"{key[0]}/{key[1]}" + (f"@{key[2]}" if key[2] else "")
         row = got.get(key)
         if row is None:
-            violations.append(f"{key[0]}/{key[1]}: row missing "
+            violations.append(f"{label}: row missing "
                               f"(baseline {base_us:.2f}us)")
             continue
         new_us = float(row.get("us_per_call", -1.0))
         if new_us < 0:
-            violations.append(f"{key[0]}/{key[1]}: now errors "
+            violations.append(f"{label}: now errors "
                               f"({row.get('error', 'unknown')}), baseline "
                               f"{base_us:.2f}us")
         elif new_us > base_us * tol:
             violations.append(
-                f"{key[0]}/{key[1]}: {new_us:.2f}us exceeds baseline "
+                f"{label}: {new_us:.2f}us exceeds baseline "
                 f"{base_us:.2f}us by {(new_us / base_us - 1) * 100:.1f}% "
                 f"(tolerance {tolerance_pct:.1f}%)")
-    baseline_keys = {(b.get("suite"), b.get("name"))
+    baseline_keys = {(b.get("suite"), b.get("name"), b.get("target", ""))
                      for b in baseline.get("rows", [])}
     new_rows = [k for k in got if k not in baseline_keys]
     if new_rows:
@@ -154,11 +159,20 @@ def main() -> None:
     for name, module in suites.items():
         n_rows = 0
         try:
-            for row_name, us, derived in module.run():
+            for row in module.run():
+                # Rows are (name, us, derived) or, for multi-target suites,
+                # (name, us, derived, target) — the target rides into the
+                # JSON records so the perf gate keys per backend.
+                row_name, us, derived = row[0], row[1], row[2]
+                target = row[3] if len(row) > 3 else ""
                 n_rows += 1
-                print(f"{row_name},{us:.2f},{derived}", flush=True)
-                records.append({"suite": name, "name": row_name,
-                                "us_per_call": us, "derived": derived})
+                shown = f"{row_name}@{target}" if target else row_name
+                print(f"{shown},{us:.2f},{derived}", flush=True)
+                rec = {"suite": name, "name": row_name,
+                       "us_per_call": us, "derived": derived}
+                if target:
+                    rec["target"] = target
+                records.append(rec)
         except Exception as e:
             failures += 1
             print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)

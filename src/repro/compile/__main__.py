@@ -24,6 +24,7 @@ import argparse
 import json
 import sys
 
+from ..core.sysgraph import TARGET_ALIASES, TARGETS, resolve_target
 from .artifact import CompileError
 from .cache import ArtifactCache, set_default_artifact_cache
 from .driver import (compile_conv, compile_fabric, compile_gemm, compile_gru,
@@ -57,7 +58,7 @@ def _parse_shape(text: str, kernel: str) -> dict:
     return {"batch": dims[0], "hidden": dims[1]}
 
 
-def _compile_case(kernel: str, kw: dict, approach, args):
+def _compile_case(kernel: str, kw: dict, approach, args, graph):
     if args.chips > 1:
         from ..fabric.topology import make_topology
         topo = make_topology(args.topology, args.chips)
@@ -71,7 +72,8 @@ def _compile_case(kernel: str, kw: dict, approach, args):
                               approach=approach)
     fn = {"gemm": compile_gemm, "gru": compile_gru,
           "conv": compile_conv}[kernel]
-    return fn(approach=approach, verify=not args.no_verify, **kw)
+    return fn(approach=approach, graph=graph, verify=not args.no_verify,
+              **kw)
 
 
 def _proxy_args(kernel: str, kw: dict) -> dict:
@@ -85,14 +87,14 @@ def _proxy_args(kernel: str, kw: dict) -> dict:
                 cout=min(kw["cout"], 8))
 
 
-def _validate(kernel: str, kw: dict, approach):
-    """Bit-exact executor-vs-oracle replay of a proxy-sized compile."""
+def _validate(kernel: str, kw: dict, approach, graph):
+    """Bit-exact executor-vs-oracle replay of a proxy-sized compile on the
+    same target graph the full-size artifact was compiled for."""
     from ..search.evaluate import validate_schedule
     from .driver import _FRONTENDS, compile_selection
-    from ..core.sysgraph import tpu_v5e
     pkw = _proxy_args(kernel, kw)
     orig, sel = _FRONTENDS[kernel](**pkw)
-    art = compile_selection(sel, tpu_v5e(1), approach, program=orig)
+    art = compile_selection(sel, graph, approach, program=orig)
     return validate_schedule(orig, sel, art.ensure_schedule())
 
 
@@ -114,6 +116,12 @@ def main(argv=None) -> int:
                     help="compile a fixed case list instead of one kernel")
     ap.add_argument("--approach", choices=["greedy", "costmodel"],
                     default="greedy")
+    ap.add_argument("--target",
+                    choices=sorted(set(TARGETS) | set(TARGET_ALIASES)),
+                    default="tpu_v5e",
+                    help="modeled hardware target (core.sysgraph factory); "
+                         "single-chip compiles and --validate replays run "
+                         "against this graph")
     ap.add_argument("--chips", type=int, default=1,
                     help=">1 compiles the fabric partition for the topology")
     ap.add_argument("--topology", choices=["ring", "torus", "host"],
@@ -136,6 +144,10 @@ def main(argv=None) -> int:
     if args.cache and not args.no_cache:
         set_default_artifact_cache(ArtifactCache(args.cache))
     approach = resolve_approach(args.approach)
+    graph = resolve_target(args.target)
+    if args.chips > 1 and graph.family != "tpu":
+        ap.error("--chips > 1 (fabric compile) currently supports the "
+                 "tpu_v5e target only")
 
     if args.suite == "smoke":
         cases = SMOKE_CASES
@@ -157,7 +169,7 @@ def main(argv=None) -> int:
     failures = 0
     for kernel, kw in cases:
         try:
-            art = _compile_case(kernel, kw, approach, args)
+            art = _compile_case(kernel, kw, approach, args, graph)
         except CompileError as e:
             print(f"[FAIL] {kernel} {kw}: {e}", file=sys.stderr)
             failures += 1
@@ -180,7 +192,7 @@ def main(argv=None) -> int:
             status = "MISS"
             failures += 1
         if args.validate and args.chips == 1:
-            rep = _validate(kernel, kw, approach)
+            rep = _validate(kernel, kw, approach, graph)
             row["oracle_exact"] = rep.exact
             if not rep.exact:
                 status = "MISMATCH"
@@ -190,7 +202,8 @@ def main(argv=None) -> int:
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"schema": 1, "approach": args.approach,
-                       "failures": failures, "rows": rows}, f, indent=2)
+                       "target": args.target, "failures": failures,
+                       "rows": rows}, f, indent=2)
         print(f"# report: {args.json}")
     return 1 if failures else 0
 

@@ -176,9 +176,12 @@ class LowerPass(Pass):
 
     @staticmethod
     def _lowering(ctx: CompileContext, plans: list[InstrPlan]) -> dict:
-        """Backend config: a single full-cover matmul lowers to the Pallas
-        blocked-GEMM BlockSpec; everything else stays an executor-backed
-        instruction stream."""
+        """Backend config: a single full-cover matmul lowers to a blocked
+        Pallas GEMM BlockSpec — ``pallas_gemm`` (TPU/paper: block sized for
+        VMEM) or ``pallas_gpu_gemm`` (GPU family: block sized for the
+        cluster's shared memory, with the staged panel bytes recorded so
+        the artifact checker can audit the fit).  Everything else stays an
+        executor-backed instruction stream."""
         sel = ctx.selection
         mm = [p for p in plans if p.needle.startswith("mxu.matmul")]
         if len(plans) == 1 and mm and not sel.steps:
@@ -194,6 +197,13 @@ class LowerPass(Pass):
                 return {"kind": "stream"}
             grid = tuple(math.ceil(extents[na] / b)
                          for na, b in zip(("i", "j", "k"), block))
+            if getattr(ctx.graph, "family", "") == "gpu":
+                # A (bm, bk) + B (bk, bn) panels plus the C (bm, bn)
+                # accumulator tile staged in shared memory, f32 elements.
+                bm, bn, bk = block[0], block[1], block[2]
+                smem = 4 * (bm * bk + bk * bn + bm * bn)
+                return {"kind": "pallas_gpu_gemm", "block": list(block),
+                        "grid": list(grid), "smem_bytes": smem}
             return {"kind": "pallas_gemm", "block": list(block),
                     "grid": list(grid)}
         return {"kind": "stream"}

@@ -47,7 +47,11 @@ class Approach:
     """
 
     # ---- decision points as data (driven by repro.search.space) -----------
-    #: VMEM budget the tile working set may claim (bytes)
+    #: ceiling on the staging-memory bytes a tile working set may claim.
+    #: The effective budget is min(this, the target graph's
+    #: ``staging_budget``) — on real targets the graph-derived budget (TPU
+    #: VMEM, GPU shared memory, register files) is the binding term and
+    #: this constant only caps budget-free calls.
     tile_vmem_budget: int = 96 << 20
     #: fraction of the (device-capped) budget the tile may actually use
     vmem_frac: float = 1.0

@@ -368,13 +368,12 @@ class Scheduler:
                         window_axes.append(a)
 
         devices = self.graph.compute_nodes_for(si.needle.name)
-        vmem_cap = min(self.graph.memories[d.memory].capacity
-                       for d in devices) if devices else None
         tile_req = self.approach.choose_tile_shape(
             si.needle.name,
             {na: self.prog.axis(ha).size for na, ha in axis_map.items()},
             device_tile,
-            vmem_budget=None if vmem_cap is None else vmem_cap // 3)
+            vmem_budget=self.graph.staging_budget(devices) if devices
+            else None)
 
         # Per-axis tile size: mapped axes tile by hardware shape, outer axes
         # advance one point per call — except for pure elementwise

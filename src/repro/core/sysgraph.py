@@ -7,19 +7,33 @@ Nodes are stateful during scheduling: memory nodes track resident buffer
 copies, compute nodes accumulate their instruction streams — the graph is the
 hardware abstraction layer the static scheduler dry-runs against.
 
-Two factories are provided:
+Three factories are provided:
 
   * ``tpu_v5e(n_cores)`` — the TPU target: HBM (819 GB/s, 16 GiB) feeding
     per-core VMEM (128 MiB) feeding an MXU (matmul) + VPU (elementwise).
+  * ``gpu_sm(n_sms)`` — the GPU target: one HBM3 module feeding thread-block
+    clusters of SMs, each cluster staging through its distributed shared
+    memory, with NVLink-class links between clusters when ``n_sms > 1``.
   * ``paper_accelerator(n_clusters)`` — the paper's case-study device
     (Section 5): clusters of paired processing units sharing register files,
     several HBM modules, everything explicitly managed.  Used by the GEMM and
     GRU benchmarks so results are comparable with the paper's Figures 3-4.
+
+Memories carry a *role* (``host`` / ``global`` / ``staging``) so budget and
+capacity logic — the scheduler's tile budget, the verifier's working-set
+rules — reads the target's structure instead of hardcoding well-known TPU
+names; ``resolve_target`` maps the CLI ``--target`` names onto factories.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
+
+#: memory level -> default role.  ``host`` is system memory, ``global`` is
+#: the device-wide store (HBM), ``staging`` is the explicitly managed
+#: close-to-compute tier (TPU VMEM, GPU shared memory, register files) that
+#: tile working sets are budgeted against.
+_LEVEL_ROLES = {0: "host", 1: "global", 2: "staging"}
 
 
 @dataclass(frozen=True)
@@ -27,6 +41,12 @@ class MemoryNode:
     name: str
     capacity: int                  # bytes
     level: int                     # 0 = host/system memory, larger = closer
+    role: str = ""                 # host | global | staging (default: level)
+
+    def __post_init__(self):
+        if not self.role:
+            object.__setattr__(
+                self, "role", _LEVEL_ROLES.get(self.level, "staging"))
 
 
 @dataclass(frozen=True)
@@ -58,10 +78,12 @@ class SystemGraph:
     memories: dict[str, MemoryNode] = field(default_factory=dict)
     computes: dict[str, ComputeNode] = field(default_factory=dict)
     edges: list[MoveEdge] = field(default_factory=list)
+    family: str = "generic"        # tpu | gpu | paper | generic
 
     # -- construction -------------------------------------------------------
-    def add_memory(self, name: str, capacity: int, level: int) -> None:
-        self.memories[name] = MemoryNode(name, capacity, level)
+    def add_memory(self, name: str, capacity: int, level: int,
+                   role: str = "") -> None:
+        self.memories[name] = MemoryNode(name, capacity, level, role)
 
     def add_compute(self, name: str, memory: str, instructions, flops: float,
                     **kw) -> None:
@@ -138,6 +160,20 @@ class SystemGraph:
     def memory_of(self, compute: str) -> MemoryNode:
         return self.memories[self.computes[compute].memory]
 
+    def staging_budget(self, devices=None) -> int | None:
+        """Per-tile working-set budget: a third of the smallest staging
+        memory feeding ``devices`` (default: all compute nodes).  The /3
+        leaves headroom for resident weights and in-flight copies next to
+        the active tile; the single definition behind the scheduler's
+        tile shapes, the evaluators' feasibility guards and the tuner's
+        cache records — whatever the staging tier is called (TPU VMEM,
+        GPU shared memory, register files)."""
+        devs = list(self.computes.values()) if devices is None \
+            else list(devices)
+        caps = [self.memories[d.memory].capacity for d in devs
+                if d.memory in self.memories]
+        return min(caps) // 3 if caps else None
+
 
 # --------------------------------------------------------------------------- #
 # Hardware constants (v5e) — shared with the roofline analysis
@@ -179,7 +215,7 @@ def tpu_v5e(n_cores: int = 1, host_mem: int = 512 << 30) -> SystemGraph:
     proper bidirectional ring (with the wraparound link the old ad-hoc
     wiring was missing) whose per-direction copies are issued by the
     receiving chip's core."""
-    g = SystemGraph(f"tpu_v5e_x{n_cores}")
+    g = SystemGraph(f"tpu_v5e_x{n_cores}", family="tpu")
     g.add_memory("host", host_mem, level=0)
     for c in range(n_cores):
         add_v5e_chip(g, c)
@@ -189,12 +225,84 @@ def tpu_v5e(n_cores: int = 1, host_mem: int = 512 << 30) -> SystemGraph:
     return g
 
 
+# --------------------------------------------------------------------------- #
+# Hardware constants (GPU, H100-class) — shared with bench_portability
+# --------------------------------------------------------------------------- #
+
+GPU_PEAK_FLOPS = 989e12        # bf16 dense FLOP/s, whole device
+GPU_HBM_BW = 3.35e12           # HBM3 bytes/s, whole device
+GPU_HBM_BYTES = 80 << 30
+GPU_SMEM_BYTES = 228 << 10     # usable shared memory per SM
+GPU_SMS_PER_CLUSTER = 16       # thread-block cluster size (distributed smem)
+GPU_NVLINK_BW = 450e9          # bytes/s per direction, NVLink-class
+GPU_PCIE_BW = 64e9             # host link, PCIe gen5 x16
+GPU_CLOCK = 1.8e9
+
+
+def gpu_sm(n_sms: int = 8, host_mem: int = 512 << 30) -> SystemGraph:
+    """A modeled GPU as a system graph: ``n_sms`` thread-block clusters.
+
+    The schedulable compute unit is a *cluster* of ``GPU_SMS_PER_CLUSTER``
+    SMs cooperating through distributed shared memory (the warp/SM tier
+    below it is implicit in the cluster's aggregate FLOP rate), so tile
+    working sets are budgeted against the cluster-wide staging capacity
+    rather than one SM's 228 KB — the same explicitly managed three-level
+    shape (host -> global HBM -> staging) the scheduler already dry-runs,
+    with GPU capacities and bandwidths:
+
+      * one HBM3 module (``hbm0``, level 1, role ``global``) shared by all
+        clusters; each cluster's load path gets an equal slice of the
+        aggregate HBM bandwidth,
+      * per-cluster shared memory (``smem{c}``, level 2, role ``staging``),
+      * NVLink-class cluster-to-cluster ring links when ``n_sms > 1`` (the
+        DSM/switch fabric, which the fabric layer can extend device-to-
+        device).
+
+    Clusters execute the same needle prefixes as every other target — the
+    paper's portability claim is that mapping/selection are target-agnostic
+    and only scheduling/lowering consult the machine.
+    """
+    g = SystemGraph(f"gpu_sm_x{n_sms}", family="gpu")
+    g.add_memory("host", host_mem, level=0)
+    g.add_memory("hbm0", GPU_HBM_BYTES, level=1)
+    g.add_edge("host", "hbm0", bandwidth=GPU_PCIE_BW, latency=2e-6,
+               issuer="host", rev_issuer="sm0")
+    cluster_flops = GPU_PEAK_FLOPS / 8          # ~8 clusters per device
+    cluster_smem = GPU_SMS_PER_CLUSTER * GPU_SMEM_BYTES
+    for c in range(n_sms):
+        smem = f"smem{c}"
+        g.add_memory(smem, cluster_smem, level=2)
+        # TMA loads: every cluster gets an equal share of HBM bandwidth.
+        g.add_edge("hbm0", smem, bandwidth=GPU_HBM_BW / n_sms, latency=5e-7,
+                   issuer=f"sm{c}")
+        g.add_compute(
+            f"sm{c}", smem,
+            {"mxu.", "vpu.", "fused."},
+            flops=cluster_flops,
+            # cluster-wide WGMMA tile: 16 SMs x (64, 64) warpgroup output
+            # panels arranged 4x4, reduction in k=32 steps
+            matmul_tile=(256, 256, 32),
+            vector_lanes=GPU_SMS_PER_CLUSTER * 128,
+            clock_hz=GPU_CLOCK)
+    if n_sms > 1:
+        # DSM / NVLink-class ring between neighbouring clusters, each
+        # direction issued by the receiving side (pull-style TMA).
+        for c in range(n_sms):
+            nxt = (c + 1) % n_sms
+            if n_sms == 2 and c == 1:
+                break               # a 2-ring has one physical link
+            g.add_edge(f"smem{c}", f"smem{nxt}", bandwidth=GPU_NVLINK_BW,
+                       latency=3e-7, issuer=f"sm{nxt}",
+                       rev_issuer=f"sm{c}")
+    return g
+
+
 def paper_accelerator(n_clusters: int = 2, regfile_bytes: int = 8 << 20,
                       hbm_modules: int = 2) -> SystemGraph:
     """The paper's case-study architecture (Section 5): clusters of paired
     matrix/elementwise processing units sharing large register files, several
     HBM modules, no cache hierarchy — all memory explicitly managed."""
-    g = SystemGraph(f"paper_accel_x{n_clusters}")
+    g = SystemGraph(f"paper_accel_x{n_clusters}", family="paper")
     g.add_memory("host", 512 << 30, level=0)
     for m in range(hbm_modules):
         g.add_memory(f"hbm{m}", 8 << 30, level=1)
@@ -213,3 +321,32 @@ def paper_accelerator(n_clusters: int = 2, regfile_bytes: int = 8 << 20,
                 flops=25e12, matmul_tile=(64, 64, 64), vector_lanes=256,
                 clock_hz=1.0e9)
     return g
+
+
+# --------------------------------------------------------------------------- #
+# Target registry — the CLI ``--target`` vocabulary
+# --------------------------------------------------------------------------- #
+
+#: canonical target name -> zero-arg factory for the default single-device
+#: graph.  CLI surfaces (``repro compile|tune|dryrun``, benchmarks, CI
+#: matrices) resolve through this table so adding a third target is one
+#: entry here plus its factory above.
+TARGETS: dict[str, object] = {
+    "tpu_v5e": lambda: tpu_v5e(1),
+    "gpu_sm": lambda: gpu_sm(8),
+    "paper": lambda: paper_accelerator(2),
+}
+
+#: historical / short spellings accepted by resolve_target.
+TARGET_ALIASES = {"v5e": "tpu_v5e", "tpu": "tpu_v5e", "gpu": "gpu_sm"}
+
+
+def resolve_target(name: str) -> SystemGraph:
+    """The default SystemGraph for a ``--target`` name (aliases accepted)."""
+    canon = TARGET_ALIASES.get(name, name)
+    try:
+        return TARGETS[canon]()
+    except KeyError:
+        raise KeyError(
+            f"unknown target {name!r}; known: "
+            f"{sorted(set(TARGETS) | set(TARGET_ALIASES))}") from None

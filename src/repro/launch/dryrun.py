@@ -30,7 +30,7 @@ from ..dist.sharding import (batch_shardings, cache_shardings,
                              make_activation_rules, param_shardings,
                              replicated)
 from ..models.config import SHAPES
-from .hlo_analysis import roofline_terms
+from .hlo_analysis import TARGET_ROOFLINES, roofline_terms
 from .hlo_flops import analyse_hlo
 from .mesh import make_production_mesh
 from .steps import (eval_shape_cache, eval_shape_opt_state,
@@ -107,11 +107,13 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     return compiled, lowered, {"chips": chips, "cfg": cfg, "shape": shape}
 
 
-def analyse(compiled, lowered, meta, elapsed: float) -> dict:
+def analyse(compiled, lowered, meta, elapsed: float,
+            target: str = "tpu_v5e") -> dict:
     chips = meta["chips"]
     cfg, shape = meta["cfg"], meta["shape"]
     out: dict = {"arch": cfg.name, "shape": shape.name, "chips": chips,
-                 "kind": shape.kind, "compile_s": round(elapsed, 2)}
+                 "kind": shape.kind, "target": target,
+                 "compile_s": round(elapsed, 2)}
 
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):
@@ -152,7 +154,8 @@ def analyse(compiled, lowered, meta, elapsed: float) -> dict:
 
     # the parsed module is the per-device SPMD program; scale to the job.
     out["roofline"] = roofline_terms(flops * chips, nbytes * chips,
-                                     stats.collective_bytes * chips, chips)
+                                     stats.collective_bytes * chips, chips,
+                                     target=target)
     # Model FLOPs: 6 * N_active * D(tokens) for training; decode counts 1 tok
     n_active = cfg.param_count(active_only=True)
     if shape.kind == "train":
@@ -170,7 +173,8 @@ def analyse(compiled, lowered, meta, elapsed: float) -> dict:
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
-             overrides: dict | None = None) -> dict:
+             overrides: dict | None = None,
+             target: str = "tpu_v5e") -> dict:
     multi = mesh_kind == "multi"
     t0 = time.time()
     record: dict
@@ -183,7 +187,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
         try:
             compiled, lowered, meta = lower_cell(arch, shape_name, multi,
                                                  overrides)
-            record = analyse(compiled, lowered, meta, time.time() - t0)
+            record = analyse(compiled, lowered, meta, time.time() - t0,
+                             target=target)
             record["mesh"] = mesh_kind
             record["status"] = "ok"
         except Exception as e:
@@ -205,6 +210,11 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
                     default="single")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--target", choices=sorted(TARGET_ROOFLINES),
+                    default="tpu_v5e",
+                    help="modeled machine for the roofline terms (the HLO "
+                         "itself is target-independent); nightly sweeps "
+                         "both, each into its own --out dir")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -226,7 +236,8 @@ def main():
                     print(f"[skip] {arch} {shape} {mesh_kind} (cached)")
                     continue
             t0 = time.time()
-            rec = run_cell(arch, shape, mesh_kind, args.out)
+            rec = run_cell(arch, shape, mesh_kind, args.out,
+                           target=args.target)
             dt = time.time() - t0
             status = rec["status"]
             extra = ""

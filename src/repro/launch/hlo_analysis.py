@@ -10,6 +10,7 @@ import re
 from dataclasses import dataclass, field
 
 from ..core.dtypes import DTYPE_BYTES as _DTYPE_BYTES
+from ..core.sysgraph import GPU_HBM_BW, GPU_NVLINK_BW, GPU_PEAK_FLOPS
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -104,12 +105,23 @@ PEAK_FLOPS = 197e12         # bf16 / chip
 HBM_BW = 819e9              # bytes/s / chip
 ICI_BW = 50e9               # bytes/s / link
 
+#: --target name -> (peak FLOP/s, HBM bytes/s, interconnect bytes/s) per
+#: chip/device — the modeled machines of ``core.sysgraph``.  The dry-run
+#: driver selects a row so the same lowered HLO yields a per-target
+#: roofline (the nightly cross-backend sweep).
+TARGET_ROOFLINES = {
+    "tpu_v5e": (PEAK_FLOPS, HBM_BW, ICI_BW),
+    "gpu_sm": (GPU_PEAK_FLOPS, GPU_HBM_BW, GPU_NVLINK_BW),
+}
+
 
 def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
-                   chips: int) -> dict:
-    compute_s = flops / (chips * PEAK_FLOPS)
-    memory_s = hbm_bytes / (chips * HBM_BW)
-    collective_s = collective_bytes / (chips * ICI_BW)
+                   chips: int, target: str = "tpu_v5e") -> dict:
+    peak, hbm_bw, link_bw = TARGET_ROOFLINES.get(
+        target, TARGET_ROOFLINES["tpu_v5e"])
+    compute_s = flops / (chips * peak)
+    memory_s = hbm_bytes / (chips * hbm_bw)
+    collective_s = collective_bytes / (chips * link_bw)
     terms = {"compute_s": compute_s, "memory_s": memory_s,
              "collective_s": collective_s}
     dom = max(terms, key=terms.get)

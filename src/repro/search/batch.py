@@ -51,8 +51,7 @@ class _InstrPlan:
         self.axes = [na for na, _ in si.mapping.axis_map]
         self.extents = {na: prog.axis(ha).size for na, ha in si.mapping.axis_map}
         self.hw_tile = devices[0].matmul_tile
-        self.vmem_budget = min(graph.memories[d.memory].capacity
-                               for d in devices) // 3
+        self.vmem_budget = graph.staging_budget(devices)
         self.calls = 1 if is_elementwise(si.needle.name) \
             else si.mapping.calls(prog)
         self.has_k = "k" in self.extents

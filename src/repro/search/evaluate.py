@@ -161,12 +161,11 @@ class CostModelEvaluator:
             if not devices:
                 continue
             hw_tile = devices[0].matmul_tile
-            vmem_cap = min(self.graph.memories[d.memory].capacity
-                           for d in devices)
             extents = {na: prog.axis(ha).size
                        for na, ha in si.mapping.axis_map}
-            req = approach.choose_tile_shape(si.needle.name, extents, hw_tile,
-                                             vmem_budget=vmem_cap // 3)
+            req = approach.choose_tile_shape(
+                si.needle.name, extents, hw_tile,
+                vmem_budget=self.graph.staging_budget(devices))
             mapped = 1
             for na, ext in extents.items():
                 mapped *= math.ceil(ext / max(1, min(req.get(na, ext), ext)))
@@ -313,14 +312,14 @@ class LearnedEvaluator:
 def gemm_tile_for(config: Config, graph: SystemGraph,
                   m: int, n: int, k: int) -> tuple[int, int, int]:
     """The (bm, bn, bk) tile a config implies for an (m, n, k) GEMM on
-    ``graph`` — the same hw-tile + VMEM-budget inputs the scheduler hands
-    ``choose_tile_shape`` (``Scheduler._tiles_for`` splits device VMEM three
-    ways), clamped to the problem.  One definition shared by the tuner's
-    cache records, the measured backend, and the examples."""
+    ``graph`` — the same hw-tile + staging-budget inputs the scheduler hands
+    ``choose_tile_shape`` (``SystemGraph.staging_budget``), clamped to the
+    problem.  One definition shared by the tuner's cache records, the
+    measured backend, and the examples."""
     devices = graph.compute_nodes_for("mxu.matmul")
     if devices:
         hw_tile = min(d.matmul_tile for d in devices)
-        vmem = min(graph.memories[d.memory].capacity for d in devices) // 3
+        vmem = graph.staging_budget(devices)
     else:   # pragma: no cover - graph without an MXU
         hw_tile, vmem = (128, 128, 128), None
     from .cache import clamp_tile

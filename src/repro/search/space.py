@@ -221,11 +221,14 @@ def program_fingerprint(prog: Program) -> str:
 
 
 def sysgraph_fingerprint(graph: SystemGraph) -> str:
-    """Structural hash of a system graph: memory capacities/levels, compute
-    capabilities, and movement edges."""
-    parts = [graph.name]
+    """Structural hash of a system graph: target family, memory
+    capacities/levels/roles, compute capabilities, and movement edges.
+    Two targets that differ in any of these can never share an artifact,
+    tuning record or learned model (the cross-backend isolation the
+    portability tests pin down)."""
+    parts = [graph.name, f"F{getattr(graph, 'family', 'generic')}"]
     for m in sorted(graph.memories.values(), key=lambda m: m.name):
-        parts.append(f"M{m.name}:{m.capacity}:{m.level}")
+        parts.append(f"M{m.name}:{m.capacity}:{m.level}:{m.role}")
     for c in sorted(graph.computes.values(), key=lambda c: c.name):
         parts.append(f"C{c.name}:{c.memory}:{sorted(c.instructions)}:"
                      f"{c.flops_per_sec}:{c.matmul_tile}:{c.vector_lanes}:"

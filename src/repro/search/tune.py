@@ -39,7 +39,8 @@ from dataclasses import dataclass, field
 from ..compile import conv_selection, gemm_selection, gru_selection
 from ..core.ir import Program
 from ..core.isel import Selection
-from ..core.sysgraph import SystemGraph, paper_accelerator, tpu_v5e
+from ..core.sysgraph import (SystemGraph, gpu_sm, paper_accelerator,
+                             tpu_v5e)
 from .cache import TuningCache, TuningRecord, default_cache_path
 from .evaluate import (CostModelEvaluator, LearnedEvaluator,
                        MeasuredGemmEvaluator, ValidationReport, gemm_tile_for,
@@ -130,8 +131,17 @@ def build_cases(suite: str, limit: int | None = None) -> list[TuneCase]:
     return cases[:limit] if limit else cases
 
 
+#: ``--graph`` / ``--target`` vocabulary of the tuner (the historical
+#: ``v5e``/``paper`` spellings plus the canonical target names).
+GRAPH_NAMES = ("v5e", "tpu_v5e", "gpu", "gpu_sm", "paper")
+
+
 def make_graph(name: str) -> SystemGraph:
-    return paper_accelerator(2) if name == "paper" else tpu_v5e(1)
+    if name == "paper":
+        return paper_accelerator(2)
+    if name in ("gpu", "gpu_sm"):
+        return gpu_sm(8)
+    return tpu_v5e(1)
 
 
 @dataclass
@@ -388,7 +398,12 @@ def main(argv=None) -> int:
     ap.add_argument("--model", default=None, metavar="PATH",
                     help="model store for --backend learned (default: the "
                          "repro.search.model default store)")
-    ap.add_argument("--graph", choices=["v5e", "paper"], default="v5e")
+    ap.add_argument("--graph", choices=list(GRAPH_NAMES), default=None,
+                    help="historical spelling of --target (v5e/paper)")
+    ap.add_argument("--target", choices=list(GRAPH_NAMES), default=None,
+                    help="modeled hardware target to tune against "
+                         "(default tpu_v5e); per-target caches never "
+                         "collide — keys embed the sysgraph fingerprint")
     ap.add_argument("--cache", default=None,
                     help=f"cache path (default {default_cache_path()})")
     ap.add_argument("--seed", type=int, default=0)
@@ -408,7 +423,13 @@ def main(argv=None) -> int:
     strategy = args.strategy or ("surrogate" if args.backend == "learned"
                                  else "hillclimb")
 
-    graph = make_graph(args.graph)
+    if args.target and args.graph and args.target != args.graph:
+        print(f"--target {args.target} and --graph {args.graph} disagree; "
+              "pass one of them", file=sys.stderr)
+        return 2
+    target = args.target or args.graph or "v5e"
+    args.graph = target          # worker payloads carry the resolved name
+    graph = make_graph(target)
     cache = TuningCache(args.cache)
     reports: list[CaseReport] = []
     failures = 0

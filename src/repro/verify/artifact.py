@@ -46,6 +46,31 @@ def verify_artifact_dict(d: dict) -> list[Diagnostic]:
             "art.counts", f"bytes_moved {bm!r} is not a non-negative int",
             subject="bytes_moved"))
 
+    # Lowering configs are target-family-specific: a gpu-shaped config on a
+    # tpu/paper artifact (or the reverse) means keys got crossed somewhere
+    # upstream — exactly the corruption a shared cache file would show.
+    lowering = d.get("lowering") or {}
+    kind = lowering.get("kind", "") if isinstance(lowering, dict) else ""
+    gname = str(d.get("graph_name", ""))
+    gpu_graph = gname.startswith("gpu")
+    if kind == "pallas_gpu_gemm" and gname and not gpu_graph:
+        diags.append(diag(
+            "art.lowering-target",
+            f"gpu lowering config {kind!r} on non-gpu graph {gname!r}",
+            subject=gname))
+    elif kind == "pallas_gemm" and gpu_graph:
+        diags.append(diag(
+            "art.lowering-target",
+            f"tpu lowering config {kind!r} on gpu graph {gname!r}",
+            subject=gname))
+    if kind == "pallas_gpu_gemm":
+        smem = lowering.get("smem_bytes")
+        if not isinstance(smem, int) or smem < 1:
+            diags.append(diag(
+                "art.lowering-target",
+                f"gpu lowering config must carry positive smem_bytes, got "
+                f"{smem!r}", subject=gname))
+
     for i, p in enumerate(d.get("instrs") or ()):
         if not isinstance(p, dict) or "needle" not in p:
             diags.append(diag(

@@ -48,8 +48,8 @@ RULES: dict[str, str] = {
                            "latest",
     "sch.capacity": "a tile's operand working set must fit its device "
                     "memory",
-    "sch.vmem-budget": "a tile's working set exceeds the approach's VMEM "
-                       "budget (vmem_frac)",
+    "sch.vmem-budget": "a tile's working set exceeds the approach's "
+                       "staging-memory budget (vmem_frac)",
     "sch.output-not-home": "final output regions must reside at their home "
                            "memory in the latest version",
     "sch.residency": "final_residency must agree with the replayed state",
@@ -92,6 +92,9 @@ RULES: dict[str, str] = {
     "art.instr-plan": "tile plans must be role-consistent and positive",
     "art.cost": "artifact cost must be a finite non-negative number",
     "art.counts": "op counts must be non-negative integers",
+    "art.lowering-target": "the lowering config must match the artifact's "
+                           "target family (no gpu lowering on a tpu graph "
+                           "or vice versa)",
 }
 
 

@@ -69,6 +69,23 @@ def _gemm_bundle() -> Bundle:
     return copy.deepcopy(_BASE["gemm"])
 
 
+def _gpu_bundle() -> Bundle:
+    """A known-good compile on the GPU target: same program family as the
+    gemm bundle, but scheduled against ``gpu_sm`` shared memory and lowered
+    to the ``pallas_gpu_gemm`` config — the surface the two GPU corruption
+    classes attack."""
+    if "gpu" not in _BASE:
+        from ..compile.driver import compile_gemm
+        from ..core.sysgraph import gpu_sm
+        art = compile_gemm(64, 32, 48, graph=gpu_sm(2), use_cache=False)
+        _BASE["gpu"] = Bundle(program=art.selection.program,
+                              selection=art.selection,
+                              schedule=art.ensure_schedule(),
+                              approach=art.approach,
+                              artifact=art.to_dict())
+    return copy.deepcopy(_BASE["gpu"])
+
+
 def _fabric_bundle() -> Bundle:
     if "fabric" not in _BASE:
         from ..fabric.partition import partition
@@ -585,6 +602,32 @@ def _mut_art_counts(b: Bundle):
     return verify_artifact_dict(b.artifact)
 
 
+# -- gpu target ------------------------------------------------------------- #
+
+
+@mutation("gpu-smem-capacity", "sch.capacity", kind="gpu")
+def _mut_gpu_smem_capacity(b: Bundle):
+    # Shrink every shared-memory node below the tile working set: the
+    # schedule that fit real cluster smem now claims more bytes than the
+    # (corrupted) machine has — the replay must flag it, whatever the
+    # staging memory is called on this target.
+    g = b.schedule.graph
+    for m in g.memories.values():
+        if m.role == "staging":
+            object.__setattr__(m, "capacity", 1024)
+
+
+@mutation("gpu-wrong-lowering", "art.lowering-target", kind="gpu")
+def _mut_gpu_wrong_lowering(b: Bundle):
+    from .artifact import verify_artifact_dict
+    # A tpu-shaped lowering config on a gpu-keyed artifact: the config an
+    # artifact cache would serve if target families ever got crossed.
+    b.artifact["lowering"] = {"kind": "pallas_gemm",
+                              "block": b.artifact["lowering"]["block"],
+                              "grid": b.artifact["lowering"]["grid"]}
+    return verify_artifact_dict(b.artifact)
+
+
 # --------------------------------------------------------------------------- #
 # Runner
 # --------------------------------------------------------------------------- #
@@ -603,7 +646,8 @@ class MutationResult:
                f"got {sorted(set(self.rules)) or 'nothing'}"
 
 
-_BUNDLES = {"gemm": _gemm_bundle, "fabric": _fabric_bundle,
+_BUNDLES = {"gemm": _gemm_bundle, "gpu": _gpu_bundle,
+            "fabric": _fabric_bundle,
             "graph": _graph_bundle, "serve": _serve_bundle,
             "incremental": _incremental_bundle}
 
@@ -627,6 +671,10 @@ def baseline_report() -> DiagnosticReport:
     """The unmutated bundles must verify clean (no false positives)."""
     report = DiagnosticReport()
     report.extend(_verify_bundle(_gemm_bundle()))
+    gb = _gpu_bundle()
+    from .artifact import verify_artifact_dict
+    report.extend(_verify_bundle(gb))
+    report.extend(verify_artifact_dict(gb.artifact))
     fb = _fabric_bundle()
     from .fabric import verify_partition, verify_task_graph
     report.extend(verify_partition(fb.partition))

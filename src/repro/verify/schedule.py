@@ -254,7 +254,13 @@ def _check_compute(rp: _Replay, op, approach) -> list[Diagnostic]:
     for _, region, _, _ in tile.operands:
         distinct.setdefault(rp.key(region), rp.nbytes(region))
     working = sum(distinct.values())
-    cap = g.memories[mem].capacity if mem in g.memories else None
+    mnode = g.memories.get(mem)
+    cap = mnode.capacity if mnode is not None else None
+    # budget against whatever the target's compute-adjacent tier is called
+    # (TPU VMEM, GPU shared memory, register files) — the memory *role*,
+    # not a well-known node name.
+    role = getattr(mnode, "role", "staging") if mnode is not None \
+        else "staging"
     if cap is None:
         diags.append(diag(
             "sch.unknown-node",
@@ -264,7 +270,7 @@ def _check_compute(rp: _Replay, op, approach) -> list[Diagnostic]:
         diags.append(diag(
             "sch.capacity",
             f"compute {op.uid} ({tile.needle_name}): operand working set "
-            f"{working} bytes exceeds {mem} capacity {cap}",
+            f"{working} bytes exceeds {role} memory {mem} capacity {cap}",
             subject=mem, uid=op.uid))
     elif approach is not None:
         frac = getattr(approach, "vmem_frac", 1.0)
@@ -272,8 +278,8 @@ def _check_compute(rp: _Replay, op, approach) -> list[Diagnostic]:
             diags.append(diag(
                 "sch.vmem-budget",
                 f"compute {op.uid} ({tile.needle_name}): working set "
-                f"{working} bytes exceeds vmem_frac {frac} of {mem} "
-                f"capacity {cap}", severity="warning",
+                f"{working} bytes exceeds vmem_frac {frac} of {role} "
+                f"memory {mem} capacity {cap}", severity="warning",
                 subject=mem, uid=op.uid))
 
     for _, region, r, w in tile.operands:

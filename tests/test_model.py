@@ -427,8 +427,13 @@ def test_committed_ci_baseline_is_valid():
     data = json.load(open(path))
     assert data["failures"] == 0
     suites = {r["suite"] for r in data["rows"]}
-    assert suites == {"tuned", "fabric", "graph", "serve", "search"}
+    assert suites == {"tuned", "fabric", "graph", "serve", "search",
+                      "portability"}
     assert all(r["us_per_call"] > 0 for r in data["rows"])
+    # Multi-target rows must carry their target label — the gate keys on
+    # (suite, name, target) so backends never gate against each other.
+    port = [r for r in data["rows"] if r["suite"] == "portability"]
+    assert port and {r.get("target") for r in port} == {"tpu_v5e", "gpu_sm"}
 
 
 # --------------------------------------------------------------------------- #
